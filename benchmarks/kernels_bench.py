@@ -1,0 +1,49 @@
+"""Kernel micro-benchmarks: fused analog MVM (interpret mode on CPU; the
+derived column reports the HBM-roofline time the fused kernel would take on
+TPU v5e vs the unfused jnp composition's extra partial-sum traffic)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_call
+from repro.kernels.ops import analog_mvm
+from repro.kernels.ref import analog_mvm_ref
+
+HBM_BW = 819e9
+
+
+def run(fast: bool = False) -> list[str]:
+    rows = []
+    shapes = [(256, 4096, 512)] if fast else [
+        (256, 2048, 512), (256, 4096, 512), (512, 8192, 1024)]
+    for m, k, n in shapes:
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(key, (k, n), jnp.float32) * k**-0.5
+        rd, ra = jnp.float32(4.0), jnp.float32(2.0)
+
+        us_ref = time_call(
+            jax.jit(lambda x, w: analog_mvm_ref(x, w, rd, ra)), x, w, iters=2)
+        us_ker = time_call(
+            lambda x, w: analog_mvm(x, w, r_adc=ra, r_dac=rd, interpret=True),
+            x, w, iters=2)
+        # TPU roofline estimate: fused kernel moves x + w + out once; the jnp
+        # composition additionally writes+reads the (M, T, N) partials
+        tiles = -(-k // 1024)
+        fused_bytes = (m * k + k * n + m * n) * 4
+        unfused_bytes = fused_bytes + 2 * m * n * tiles * 4
+        rows.append(csv_row(
+            f"analog_mvm_ref_{m}x{k}x{n}", us_ref,
+            f"tpu_roofline_us={unfused_bytes/HBM_BW*1e6:.1f}"))
+        rows.append(csv_row(
+            f"analog_mvm_kernel_{m}x{k}x{n}", us_ker,
+            f"tpu_roofline_us={fused_bytes/HBM_BW*1e6:.1f}"
+            f"_traffic_saving={unfused_bytes/fused_bytes:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(fast=True):
+        print(r)

@@ -1,0 +1,30 @@
+"""Sec. 5.2: layer-serial pipeline never stalls the array (cycle simulator).
+
+Verifies the never-stall claim per bitwidth and shows the counterfactual
+(a 100 MHz datapath) that motivates the 800 MHz design point."""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro.core.pipeline_sim import PipelineConfig, simulate
+from repro.models import analognet_kws_config, analognet_vww_config, layer_shapes
+
+
+def run(fast: bool = False) -> list[str]:
+    rows = []
+    for name, cfg in (("kws", analognet_kws_config()),
+                      ("vww", analognet_vww_config())):
+        shapes = layer_shapes(cfg)
+        for bits in (8, 6, 4):
+            rep = simulate(shapes, bits)
+            slow = simulate(shapes, bits, PipelineConfig(digital_clock_hz=100e6))
+            rows.append(csv_row(
+                f"pipeline_{name}_{bits}b", rep.latency_s * 1e6,
+                f"stall={rep.stall_fraction*100:.1f}%"
+                f"_at100MHz={slow.stall_fraction*100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,60 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Default budgets are reduced
+(CPU-feasible); ``--full`` runs the complete protocol. ``--only <prefix>``
+filters benchmarks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (
+        appxC_heuristic,
+        fig7_drift,
+        fig8_layerwise,
+        fig9_micronet,
+        kernels_bench,
+        pipeline_bench,
+        table1_ablation,
+        table2_aoncim,
+        table3_depthwise,
+    )
+
+    suites = [
+        ("table2_aoncim", table2_aoncim.run),
+        ("table3_depthwise", table3_depthwise.run),
+        ("fig8_layerwise", fig8_layerwise.run),
+        ("pipeline", pipeline_bench.run),
+        ("kernels", kernels_bench.run),
+        ("table1_ablation", table1_ablation.run),
+        ("fig7_drift", fig7_drift.run),
+        ("fig9_micronet", fig9_micronet.run),
+        ("appxC_heuristic", appxC_heuristic.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if args.only and not name.startswith(args.only):
+            continue
+        t0 = time.time()
+        try:
+            for row in fn(fast=fast):
+                print(row)
+                sys.stdout.flush()
+        except Exception as e:  # keep the suite running
+            print(f"{name}_ERROR,0,{type(e).__name__}:{e}")
+        print(f"{name}_suite_wall,{(time.time()-t0)*1e6:.0f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end co-design scenario (the paper's headline experiment, scaled):
+
+1. train a dense KWS-style CNN with the two-stage HW-aware methodology,
+2. deploy onto the calibrated PCM CiM simulator,
+3. sweep drift time x activation bitwidth -> accuracy table (Fig. 7),
+4. report the AON-CiM latency/energy for the same model (Table 2 rows).
+
+    PYTHONPATH=src python examples/analog_deployment.py [--full]
+"""
+
+import argparse
+
+from benchmarks import common
+from repro.core import aoncim
+from repro.core.analog import AnalogConfig
+from repro.models.analognet import layer_shapes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    s = 60 if args.full else 25
+
+    print("== training (two-stage, eta=10%, 8/4-bit variants) ==")
+    models = {
+        bits: common.train_model(
+            common.KWS_BENCH, stage1=s, stage2=s, eta=0.1, b_adc=bits)
+        for bits in (8, 4)
+    }
+    acc_fp, _ = common.eval_accuracy(models[8], common.KWS_BENCH, AnalogConfig())
+    print(f"digital eval accuracy: {acc_fp:.3f}")
+
+    print("\n== PCM deployment: accuracy vs drift time (Fig. 7 protocol) ==")
+    print(f"{'time':>6} " + " ".join(f"{b}-bit" for b in models))
+    for tname, t in [("25s", 25.0), ("1h", 3600.0), ("1d", 86400.0),
+                     ("1mo", 2.6e6), ("1y", 3.15e7)]:
+        accs = []
+        for bits, params in models.items():
+            pcm = AnalogConfig().infer(b_adc=bits, t_seconds=t)
+            a, _ = common.eval_accuracy(params, common.KWS_BENCH, pcm, n_draws=2)
+            accs.append(a)
+        print(f"{tname:>6} " + " ".join(f"{a:.3f}" for a in accs))
+
+    print("\n== AON-CiM layer-serial execution (Table 2 protocol) ==")
+    shapes = layer_shapes(common.KWS_BENCH)
+    for bits in (8, 6, 4):
+        p = aoncim.model_perf(shapes, bits)
+        print(f"{bits}-bit: {p.inf_per_s:,.0f} inf/s, {p.tops:.3f} TOPS, "
+              f"{p.tops_per_w:.2f} TOPS/W, {p.uj_per_inf:.2f} uJ/inf, "
+              f"utilization {p.mapping.utilization*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""End-to-end serving driver: batched requests through prefill + decode,
+digital vs analog-PCM weights (the deployment the AON-CiM accelerator
+targets, on the LM family the framework scales the technique to).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch tinyllama-1.1b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.analog import AnalogConfig
+from repro.models import lm
+from repro.models.lm import init_lm_cache, unstack_cache
+
+
+def serve(cfg, acfg, requests, max_new_tokens, rng):
+    """requests: (B, S) prompt tokens -> (B, max_new_tokens) generations."""
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    b, s = requests.shape
+    cache = init_lm_cache(cfg, b, s + max_new_tokens, cfg.dtype)
+    logits, cache = lm.lm_forward(
+        params, {"tokens": requests}, acfg, cfg, cache=cache,
+        last_token_only=True,
+        rng=rng if acfg.mode != "digital" else None,
+    )
+    cache = unstack_cache(cache)
+
+    @jax.jit
+    def decode(tokens, cache, key):
+        logits, cache = lm.lm_forward(
+            params, {"tokens": tokens}, acfg, cfg, cache=cache,
+            rng=key if acfg.mode != "digital" else None,
+        )
+        return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), cache
+
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(max_new_tokens - 1):
+        tok, cache = decode(tok, cache, jax.random.fold_in(rng, i))
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = (time.time() - t0) / max(max_new_tokens - 1, 1)
+    return jnp.concatenate(out, 1), dt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=sorted(configs.LM_ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch)
+    key = jax.random.PRNGKey(1)
+    requests = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    gen_d, dt_d = serve(cfg, AnalogConfig(), requests, args.new_tokens, key)
+    gen_a, dt_a = serve(
+        cfg, AnalogConfig().infer(b_adc=8, t_seconds=86400.0),
+        requests, args.new_tokens, key,
+    )
+    agree = float((gen_d == gen_a).mean())
+    print(f"arch={cfg.name}  batch={args.batch}")
+    print(f"digital decode: {dt_d*1e3:.1f} ms/token")
+    print(f"analog  decode: {dt_a*1e3:.1f} ms/token (PCM weights @24h, 8-bit)")
+    print(f"token agreement digital vs analog: {agree*100:.1f}% "
+          f"(untrained weights; HW-aware training closes this gap)")
+    print("digital sample:", gen_d[0, :10].tolist())
+    print("analog  sample:", gen_a[0, :10].tolist())
+
+
+if __name__ == "__main__":
+    main()

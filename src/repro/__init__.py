@@ -1,0 +1,10 @@
+"""repro: AnalogNets + AON-CiM as a multi-pod JAX framework.
+
+The paper's contribution (noise-robust analog-CiM training, calibrated PCM
+simulation, layer-serial accelerator modeling) lives in ``repro.core``;
+``repro.models`` scales the technique from the paper's TinyML CNNs to the
+10 assigned LM architectures; ``repro.launch`` distributes everything over
+the 256/512-chip production meshes. See DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

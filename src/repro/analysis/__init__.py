@@ -1,0 +1,1 @@
+"""HLO and roofline analysis for the dry-run."""

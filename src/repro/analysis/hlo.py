@@ -1,0 +1,130 @@
+"""Post-SPMD HLO analysis: collective traffic extraction from compiled text.
+
+``compiled.as_text()`` (optimized HLO, after the SPMD partitioner) is the
+only place the real collective schedule exists -- ``cost_analysis`` has no
+collective accounting. We parse every
+
+    all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+
+instruction (sync and async -start forms), recover the transfer size from the
+*result* shape + replica-group size, and convert to per-device wire bytes
+with the standard ring-algorithm factors:
+
+    all-gather       out * (g-1)/g
+    reduce-scatter   in  * (g-1)/g      (in = out * g)
+    all-reduce       2 * size * (g-1)/g (RS + AG)
+    all-to-all       size * (g-1)/g
+    collective-permute  size
+
+Operand bytes (the raw "sum of operand sizes" metric) are also reported.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9]+\[[\d,]*\][^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict  # op -> instruction count
+    operand_bytes: dict  # op -> summed operand bytes (spec metric)
+    wire_bytes: dict  # op -> per-device ring-traffic bytes
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(self.wire_bytes.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts: dict = defaultdict(int)
+    operand_bytes: dict = defaultdict(int)
+    wire_bytes: dict = defaultdict(float)
+
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        shape_text = m.group("shape")
+        out_bytes = _shape_bytes(shape_text)
+        if m.group("start") and "(" in shape_text:
+            # async start ops carry (operand, result, ...) tuples; the result
+            # is the largest component for AG / the operand for RS. Using the
+            # tuple total double counts; take half as a robust estimate.
+            out_bytes //= 2
+
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                g = len([x for x in gl.group(1).split(",") if x.strip() != ""])
+        g = max(g, 1)
+        ring = (g - 1) / g
+
+        counts[op] += 1
+        if op == "all-gather":
+            operand_bytes[op] += out_bytes // g
+            wire_bytes[op] += out_bytes * ring
+        elif op == "reduce-scatter":
+            operand_bytes[op] += out_bytes * g
+            wire_bytes[op] += out_bytes * g * ring
+        elif op == "all-reduce":
+            operand_bytes[op] += out_bytes
+            wire_bytes[op] += 2 * out_bytes * ring
+        elif op == "all-to-all":
+            operand_bytes[op] += out_bytes
+            wire_bytes[op] += out_bytes * ring
+        else:  # collective-permute
+            operand_bytes[op] += out_bytes
+            wire_bytes[op] += out_bytes
+
+    return CollectiveStats(dict(counts), dict(operand_bytes), dict(wire_bytes))
+
+
+def op_histogram(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
+    """Instruction-name histogram -- quick remat/duplication smell test."""
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*\(?[a-z0-9]+\[[^\]]*\][^ ]*\s+([a-z][a-z0-9-]*)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

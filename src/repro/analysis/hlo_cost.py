@@ -1,0 +1,347 @@
+"""Loop-aware HLO cost analysis from optimized-HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop *body once* -- for a
+scan-over-layers LM that understates FLOPs, bytes and collective traffic by
+the layer count (verified empirically: a 10-step scanned matmul reports 1
+matmul of FLOPs). This walker parses ``compiled.as_text()`` and:
+
+  * multiplies each while body/condition by its trip count, read from the
+    instruction's ``backend_config={"known_trip_count":{"n":...}}`` (emitted
+    by XLA for counted loops; falls back to the comparison constant in the
+    condition computation);
+  * computes per-instruction FLOPs: dot_general = 2 * |out| * |contracted|
+    (contraction sizes recovered from the lhs operand's shape), elementwise
+    and reduce ops = |elements|; fusions recurse into their called
+    computation for FLOPs but charge bytes only at the fusion boundary
+    (post-fusion buffers are what actually hits HBM);
+  * accumulates collective wire bytes (ring factors, see hlo.py) scaled by
+    the enclosing loops' trip counts.
+
+All numbers are per-device (the SPMD program is single-device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$"
+)
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_GROUPS2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_L = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_NO_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota",
+}
+_NO_FLOPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "broadcast", "reshape", "transpose", "slice", "concatenate",
+    "dynamic-slice", "dynamic-update-slice", "after-all", "iota", "pad",
+    "reverse", "gather", "scatter", "convert", "reduce-window",
+}
+
+# Ops whose operand/output buffers hit HBM even under TPU-grade fusion.
+# Bare elementwise ops -- and kLoop fusions containing ONLY elementwise ops
+# (the CPU backend wraps every elementwise op in a single-op fusion) -- are
+# assumed fused into their producers/consumers (XLA TPU loop fusion) and
+# charge nothing; their tensors are charged where a "real" op touches them.
+_MEM_REAL = {
+    "dot", "convolution", "reduce", "copy",
+    "dynamic-update-slice", "concatenate", "pad", "sort", "gather",
+    "scatter", "select-and-scatter", "custom-call", "rng", "rng-bit-generator",
+}
+
+
+def _shape_elems_bytes(shape_text: str) -> tuple[int, int]:
+    elems = 0
+    total = 0
+    for dtype, dims in _SHAPE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dtype]
+    return elems, total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str  # operands + attributes
+
+    @property
+    def out_elems(self) -> int:
+        return _shape_elems_bytes(self.shape)[0]
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_elems_bytes(self.shape)[1]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.instr_shape: dict[str, str] = {}
+        self.entry: str | None = None
+        self._memo: dict[str, Cost] = {}
+        self._parse(hlo_text)
+
+    def _parse(self, text: str):
+        cur: list[Instr] | None = None
+        for line in text.splitlines():
+            header = _COMP_HEADER.match(line.strip()) if "{" in line else None
+            if header and ("->" in line):
+                name = header.group(1)
+                cur = []
+                self.computations[name] = cur
+                if line.startswith("ENTRY"):
+                    self.entry = name
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.append(ins)
+            self.instr_shape[ins.name] = ins.shape
+
+    # ----- per-instruction costs -------------------------------------
+
+    def _operand_names(self, ins: Instr) -> list[str]:
+        # operands live before the closing paren of the op call
+        depth = 1
+        end = 0
+        for i, ch in enumerate(ins.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return _OPERAND.findall(ins.rest[:end])
+
+    def _dot_flops(self, ins: Instr) -> float:
+        ops = self._operand_names(ins)
+        if not ops:
+            return 0.0
+        lhs_shape = self.instr_shape.get(ops[0], "")
+        dims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+        lhs_dims = []
+        sm = _SHAPE.search(lhs_shape)
+        if sm:
+            lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+        contracted = 1
+        if dims_m and lhs_dims:
+            for d in dims_m.group(1).split(","):
+                if d:
+                    contracted *= lhs_dims[int(d)]
+        return 2.0 * ins.out_elems * contracted
+
+    def _instr_cost(self, ins: Instr) -> Cost:
+        c = Cost()
+        op = ins.op
+        if op == "while":
+            body = _BODY.search(ins.rest)
+            cond = _COND.search(ins.rest)
+            trip = 1
+            tm = _TRIP.search(ins.rest)
+            if tm:
+                trip = int(tm.group(1))
+            elif cond and cond.group(1) in self.computations:
+                # fallback: largest integer constant in the condition
+                consts = [
+                    int(x)
+                    for i2 in self.computations[cond.group(1)]
+                    for x in re.findall(r"constant\((\d+)\)", i2.rest)
+                ]
+                trip = max(consts) if consts else 1
+            if body:
+                c.add(self.computation_cost(body.group(1)), trip)
+            if cond:
+                c.add(self.computation_cost(cond.group(1)), trip)
+            return c
+        if op == "conditional":
+            # charge the max-cost branch
+            branches = re.findall(r"branch_computations=\{([^}]*)\}", ins.rest)
+            best = Cost()
+            if branches:
+                for b in branches[0].split(","):
+                    b = b.strip().lstrip("%")
+                    if b in self.computations:
+                        bc = self.computation_cost(b)
+                        if bc.flops >= best.flops:
+                            best = bc
+            c.add(best)
+            return c
+        if op in ("call", "async-start"):
+            cm = _CALLS.search(ins.rest)
+            if cm and cm.group(1) in self.computations:
+                c.add(self.computation_cost(cm.group(1)))
+
+        # collectives (sync + async-start; -done carries no new traffic)
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in _COLLECTIVES:
+            out_bytes = ins.out_bytes
+            if op.endswith("-start"):
+                out_bytes //= 2  # (operand, result) tuple
+            g = 1
+            gm = _GROUPS2.search(ins.rest)
+            if gm:
+                g = int(gm.group(2))
+            else:
+                gl = _GROUPS_L.search(ins.rest)
+                if gl:
+                    g = len([x for x in gl.group(1).split(",") if x.strip()])
+            g = max(g, 1)
+            ring = (g - 1) / g
+            if base_op == "all-gather":
+                c.wire_bytes += out_bytes * ring
+            elif base_op == "reduce-scatter":
+                c.wire_bytes += out_bytes * g * ring
+            elif base_op == "all-reduce":
+                c.wire_bytes += 2 * out_bytes * ring
+            elif base_op == "all-to-all":
+                c.wire_bytes += out_bytes * ring
+            else:
+                c.wire_bytes += out_bytes
+            c.coll_counts[base_op] = c.coll_counts.get(base_op, 0) + 1
+            c.bytes += 2 * ins.out_bytes  # read + write locally
+            return c
+
+        # FLOPs
+        if op == "dot":
+            c.flops += self._dot_flops(ins)
+        elif op == "convolution":
+            # flops = 2 * |out| * (kernel elems / out-channels)
+            ops = self._operand_names(ins)
+            kshape = self.instr_shape.get(ops[1], "") if len(ops) > 1 else ""
+            kelems, _ = _shape_elems_bytes(kshape)
+            sm = _SHAPE.search(kshape)
+            cout = 1
+            if sm:
+                dims = [int(d) for d in sm.group(2).split(",") if d]
+                cout = dims[-1] if dims else 1
+            c.flops += 2.0 * ins.out_elems * max(kelems // max(cout, 1), 1)
+        elif op == "fusion":
+            cm = _CALLS.search(ins.rest)
+            if cm and cm.group(1) in self.computations:
+                inner = self.computation_cost(cm.group(1))
+                c.flops += inner.flops
+                c.wire_bytes += inner.wire_bytes
+                for k, v in inner.coll_counts.items():
+                    c.coll_counts[k] = c.coll_counts.get(k, 0) + v
+                if self._fusion_is_real(cm.group(1)):
+                    b = ins.out_bytes
+                    for name in self._operand_names(ins):
+                        b += _shape_elems_bytes(self.instr_shape.get(name, ""))[1]
+                    c.bytes += b
+        elif op == "reduce":
+            ops = self._operand_names(ins)
+            if ops:
+                c.flops += _shape_elems_bytes(self.instr_shape.get(ops[0], ""))[0]
+        elif op not in _NO_FLOPS:
+            c.flops += ins.out_elems  # elementwise / transcendental
+
+        # bytes: charged only at ops whose buffers survive TPU-grade fusion
+        # (elementwise chains are assumed fused; see _MEM_REAL). This makes
+        # the roofline memory term an optimistic-fusion HBM estimate rather
+        # than a CPU-fusion-boundary artifact.
+        if op in _MEM_REAL:
+            b = ins.out_bytes
+            for name in self._operand_names(ins):
+                b += _shape_elems_bytes(self.instr_shape.get(name, ""))[1]
+            c.bytes += b
+        return c
+
+    def _fusion_is_real(self, comp_name: str) -> bool:
+        """A fusion hits HBM if it contains any non-elementwise op."""
+        for i2 in self.computations.get(comp_name, []):
+            if i2.op in _MEM_REAL:
+                return True
+        return False
+
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        total = Cost()
+        self._memo[name] = total  # guards recursion
+        for ins in self.computations.get(name, []):
+            total.add(self._instr_cost(ins))
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.computation_cost(self.entry)
+
+    def loop_tree(self, name: str | None = None, depth: int = 0, mult: int = 1) -> list:
+        """Diagnostic: (depth, body_name, trip, eff_mult, body Cost) rows."""
+        name = name or self.entry
+        rows = []
+        for ins in self.computations.get(name, []):
+            if ins.op == "while":
+                body = _BODY.search(ins.rest)
+                trip = 1
+                tm = _TRIP.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                if body:
+                    bc = self.computation_cost(body.group(1))
+                    rows.append((depth, body.group(1), trip, mult * trip, bc))
+                    rows += self.loop_tree(body.group(1), depth + 1, mult * trip)
+            elif ins.op in ("fusion", "call"):
+                cm = _CALLS.search(ins.rest)
+                if cm:
+                    rows += self.loop_tree(cm.group(1), depth, mult)
+        return rows
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,116 @@
+"""Generate EXPERIMENTS.md sections from the dry-run JSONL results.
+
+    PYTHONPATH=src python -m repro.analysis.report results/dryrun.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import OrderedDict
+
+ARCH_ORDER = [
+    "mamba2-2.7b", "recurrentgemma-9b", "llama3.2-3b", "tinyllama-1.1b",
+    "olmo-1b", "qwen2-72b", "musicgen-large", "llama4-maverick-400b-a17b",
+    "phi3.5-moe-42b-a6.6b", "paligemma-3b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path: str) -> dict:
+    """Latest record per (arch, shape, mesh, mode)."""
+    recs: dict = OrderedDict()
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r.get("arch"), r.get("shape"), r.get("mesh", "-"),
+                   r.get("mode", "digital"))
+            recs[key] = r
+    return recs
+
+
+def fmt_t(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def dryrun_table(recs: dict, mesh: str, mode: str = "digital") -> list[str]:
+    lines = [
+        "| arch | shape | status | GiB/dev | compile | HLO TF/dev | collectives |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh, mode)) or recs.get(
+                (arch, shape, "-", mode))
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                lines.append(
+                    f"| {arch} | {shape} | SKIP(full-attn) | - | - | - | - |")
+                continue
+            if r["status"] != "ok":
+                lines.append(
+                    f"| {arch} | {shape} | **FAIL** | - | - | - | "
+                    f"{r.get('error','')[:60]} |")
+                continue
+            m = r["memory"]["total_nonaliased_gib"]
+            cc = r["roofline"]["collectives"]
+            coll = ", ".join(f"{k}:{v}" for k, v in sorted(cc.items()))
+            lines.append(
+                f"| {arch} | {shape} | ok | {m:.2f} | {r['t_compile_s']:.0f}s"
+                f" | {r['roofline']['hlo_flops_per_dev']/1e12:.2f}"
+                f" | {coll[:70]} |")
+    return lines
+
+
+def roofline_table(recs: dict, mesh: str = "16x16", mode: str = "digital") -> list[str]:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck |"
+        " useful FLOPs | roofline frac | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("memory", "train"): "fewer/smaller materialized intermediates (fusion, remat policy, chunk size)",
+        ("memory", "prefill"): "larger attention chunks / fused flash kernel",
+        ("memory", "decode"): "KV-cache dtype + in-place DUS accounting; quantized cache",
+        ("collective", "train"): "reduce-scatter instead of all-gather+reduce; overlap with compute; int8 grads",
+        ("collective", "prefill"): "resharding removal between attention and MLP",
+        ("collective", "decode"): "weight replication (done); smaller softmax partials",
+        ("compute", "train"): "less remat recompute; padding waste from head sharding",
+        ("compute", "prefill"): "causal-block skip in chunked attention (2x)",
+        ("compute", "decode"): "already tiny; latency-bound",
+    }
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh, mode))
+            if r is None or r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            kind = ("train" if shape.startswith("train") else
+                    "prefill" if shape.startswith("prefill") else "decode")
+            hint = hints.get((rf["bottleneck"], kind), "-")
+            lines.append(
+                f"| {arch} | {shape} | {fmt_t(rf['t_compute_s'])} |"
+                f" {fmt_t(rf['t_memory_s'])} | {fmt_t(rf['t_collective_s'])} |"
+                f" {rf['bottleneck']} | {rf['useful_flops_frac']:.2f} |"
+                f" {rf['roofline_fraction']:.3f} | {hint} |")
+    return lines
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    recs = load(path)
+    print("### Single-pod (16x16 = 256 chips)\n")
+    print("\n".join(dryrun_table(recs, "16x16")))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print("\n".join(dryrun_table(recs, "2x16x16")))
+    print("\n### Roofline (single-pod)\n")
+    print("\n".join(roofline_table(recs)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Fault-tolerant sharded checkpointing."""
+
+from repro.checkpoint.store import (  # noqa: F401
+    AsyncCheckpointer,
+    gc_old,
+    latest_step,
+    read_meta,
+    restore,
+    save,
+)

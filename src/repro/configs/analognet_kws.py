@@ -1,0 +1,7 @@
+"""AnalogNet-KWS: the paper's own keyword-spotting model (Sec. 4.1)."""
+
+from repro.models.analognet import CNNConfig, analognet_kws_config
+
+
+def config() -> CNNConfig:
+    return analognet_kws_config()

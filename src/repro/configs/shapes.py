@@ -1,0 +1,116 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+Every (arch x shape) pair is one dry-run cell:
+  train_4k     seq=4096   batch=256  -> train_step
+  prefill_32k  seq=32768  batch=32   -> prefill_step
+  decode_32k   seq=32768  batch=128  -> serve_step (1 new token, 32k cache)
+  long_500k    seq=524288 batch=1    -> serve_step (sub-quadratic archs only)
+
+Specs are weak-type-correct ShapeDtypeStructs: shardable stand-ins that never
+allocate device memory (the full configs are exercised ONLY through
+lower/compile).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SUBQUADRATIC
+from repro.models.common import ModelConfig
+from repro.models.lm import init_lm_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(arch_id: str, shape_name: str) -> bool:
+    """long_500k needs sub-quadratic sequence mixing (assignment rule)."""
+    if shape_name == "long_500k":
+        return arch_id in SUBQUADRATIC
+    return True
+
+
+def _token_batch_specs(cfg: ModelConfig, batch: int, seq: int, with_labels: bool):
+    i32 = jnp.int32
+    specs: dict = {}
+    if cfg.frontend == "audio_frames":
+        specs["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.dtype)
+        if with_labels:
+            specs["labels"] = jax.ShapeDtypeStruct(
+                (batch, seq, cfg.n_codebooks), i32
+            )
+        return specs
+    if cfg.frontend == "vision_patches":
+        s_text = seq - cfg.num_patches  # transformer sees exactly `seq` positions
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, s_text), i32)
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), cfg.dtype
+        )
+        if with_labels:
+            specs["labels"] = jax.ShapeDtypeStruct((batch, s_text), i32)
+        return specs
+    specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    if with_labels:
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int, stacked: bool = True):
+    return jax.eval_shape(
+        lambda: init_lm_cache(cfg, batch, s_max, cfg.dtype, stacked=stacked)
+    )
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the step function.
+
+    Returns a dict with keys:
+      batch  -- the data batch pytree
+      cache  -- decode/prefill KV/state cache (absent for train)
+    """
+    cell = SHAPES[shape_name]
+    if cell.kind == "train":
+        return {
+            "batch": _token_batch_specs(
+                cfg, cell.global_batch, cell.seq_len, with_labels=True
+            )
+        }
+    if cell.kind == "prefill":
+        return {
+            "batch": _token_batch_specs(
+                cfg, cell.global_batch, cell.seq_len, with_labels=False
+            ),
+            "cache": cache_specs(cfg, cell.global_batch, cell.seq_len),
+        }
+    # decode: one new token against a cache of seq_len. Unstacked (list)
+    # layout: per-layer in-place token writes (see models.lm.init_lm_cache).
+    specs: dict = {
+        "cache": cache_specs(cfg, cell.global_batch, cell.seq_len, stacked=False),
+    }
+    if cfg.frontend == "audio_frames":
+        specs["batch"] = {
+            "frames": jax.ShapeDtypeStruct(
+                (cell.global_batch, 1, cfg.d_model), cfg.dtype
+            )
+        }
+    else:
+        specs["batch"] = {
+            "tokens": jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+        }
+    return specs

@@ -1,0 +1,22 @@
+"""Core analog compute-in-memory library (the paper's primary contribution).
+
+Public API:
+  * quant     -- DAC/ADC learnable-range fake-quantizers, shared ADC gain S
+  * noise     -- noise-injection training (Eq. 1-2) with STE clip
+  * pcm       -- calibrated PCM statistical model (program/drift/read, GDC)
+  * analog    -- AnalogLinear / analog_matmul with digital/train/infer modes
+  * crossbar  -- im2col, depthwise densification, layer-serial tiler
+  * aoncim    -- AON-CiM cycle/energy model (Table 2 / Fig. 8)
+"""
+
+from repro.core import analog, aoncim, crossbar, noise, pcm, quant  # noqa: F401
+from repro.core.analog import (  # noqa: F401
+    ANALOG_TRAIN,
+    DIGITAL,
+    PCM_INFER,
+    AnalogConfig,
+    AnalogCtx,
+    analog_matmul,
+    linear_apply,
+    linear_init,
+)

@@ -1,0 +1,278 @@
+"""AnalogLinear / AnalogConv: analog-CiM-deployable layers (paper Sec. 3-4).
+
+Every stationary-weight matmul in the framework goes through
+:func:`analog_matmul`, which has three execution paths selected by
+``AnalogConfig.mode``:
+
+  * ``digital``       -- plain matmul (FP baseline / fastest training).
+  * ``analog_train``  -- the paper's HW-aware training graph (Fig. 4):
+                          STE weight clip -> Gaussian noise injection (Eq. 1)
+                          -> DAC fake-quant on inputs -> MVM -> per-crossbar-
+                          tile ADC fake-quant on partial sums -> digital sum.
+  * ``pcm_infer``     -- deployment simulation: weights pass through the
+                          calibrated PCM chain (program/drift/read noise,
+                          pcm.py), inputs/outputs through *hard* DAC/ADC
+                          quantizers, and global drift compensation is applied
+                          digitally to the ADC outputs.
+
+Faithfulness note: when a layer's fan-in exceeds the physical array rows
+(1024), the layer is split across row tiles and the hardware ADC-converts each
+tile's bitline charge *before* digital accumulation. We reproduce that with
+per-tile quantization -- it is the dominant quantization effect for LM-scale
+layers (K = 4096..8192 spans 4..8 tiles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import noise as noise_lib
+from repro.core import pcm as pcm_lib
+from repro.core import quant as quant_lib
+from repro.core.quant import QuantSpec
+
+Array = jax.Array
+
+DIGITAL = "digital"
+ANALOG_TRAIN = "analog_train"
+PCM_INFER = "pcm_infer"
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogConfig:
+    """Static configuration of the analog execution environment."""
+
+    mode: str = DIGITAL
+    eta: float = 0.1  # training-noise level (Eq. 1); paper sweeps 2%..20%
+    b_adc: int = 8  # ADC ENOB; DAC = b_adc + 1 (Eq. 3)
+    quant_noise_p: float = 1.0  # Fan et al. stochastic-quant prob (0.5 in paper)
+    per_tile_adc: bool = True
+    tile_rows: int = 1024  # physical crossbar source lines
+    tile_cols: int = 512  # physical crossbar bitlines (differential columns)
+    t_seconds: float = 86400.0  # PCM evaluation time (24 h default, Table 1)
+    pcm: pcm_lib.PCMConfig = dataclasses.field(default_factory=pcm_lib.PCMConfig)
+    use_kernel: bool = False  # route the fused MVM through the Pallas kernel
+    interpret: bool = False  # Pallas interpret mode (CPU validation)
+
+    @property
+    def spec(self) -> QuantSpec:
+        return QuantSpec(b_adc=self.b_adc, quant_noise_p=self.quant_noise_p)
+
+    def train(self, **kw) -> "AnalogConfig":
+        return dataclasses.replace(self, mode=ANALOG_TRAIN, **kw)
+
+    def infer(self, **kw) -> "AnalogConfig":
+        return dataclasses.replace(self, mode=PCM_INFER, quant_noise_p=1.0, **kw)
+
+
+@dataclasses.dataclass
+class AnalogCtx:
+    """Per-call (traced) context threaded through the model."""
+
+    cfg: AnalogConfig
+    gain_s: Array  # the single network-wide ADC gain S (Eq. 5)
+    key: Optional[Array] = None  # base RNG for noise draws (None = no noise)
+    layer_counter: int = 0  # folded into noise keys for uniqueness
+
+    def next_key(self) -> Optional[Array]:
+        if self.key is None:
+            return None
+        self.layer_counter += 1
+        return jax.random.fold_in(self.key, self.layer_counter)
+
+
+def _tile_matmul_quant(
+    x: Array,
+    w: Array,
+    r_adc: Array,
+    spec: QuantSpec,
+    tile_rows: int,
+    per_tile_adc: bool,
+    qn_key: Optional[Array],
+    out_scale: Array | float = 1.0,
+) -> Array:
+    """MVM with per-row-tile ADC quantization and digital accumulation.
+
+    x: (..., K)  w: (K, N). Partial sums over each K-tile of ``tile_rows``
+    rows are ADC-quantized independently (each physical tile has its own
+    bitline ADCs sharing the same fixed gain), then summed digitally and
+    scaled by ``out_scale`` (the GDC factor; 1.0 during training).
+    """
+    k = w.shape[0]
+    acc_dtype = jnp.float32
+    if not per_tile_adc or k <= tile_rows:
+        y = jnp.matmul(x, w, preferred_element_type=acc_dtype)
+        y = quant_lib.adc_quantize(y, r_adc, spec, qn_key)
+        return (y * out_scale).astype(x.dtype)
+
+    n_tiles = -(-k // tile_rows)
+    pad = n_tiles * tile_rows - k
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        w = jnp.pad(w, [(0, pad), (0, 0)])
+    xt = x.reshape(x.shape[:-1] + (n_tiles, tile_rows))
+    wt = w.reshape(n_tiles, tile_rows, w.shape[-1])
+    # (..., T, rows) x (T, rows, N) -> (..., T, N): one MVM per physical tile.
+    y_tiles = jnp.einsum(
+        "...tk,tkn->...tn", xt, wt, preferred_element_type=acc_dtype
+    )
+    y_tiles = quant_lib.adc_quantize(y_tiles, r_adc, spec, qn_key)
+    # per-tile quantized partials are grid values: store at compute dtype
+    y = jnp.sum(y_tiles.astype(x.dtype), axis=-2, dtype=acc_dtype)
+    return (y * out_scale).astype(x.dtype)
+
+
+def analog_matmul(
+    x: Array,
+    w: Array,
+    *,
+    r_adc: Array,
+    w_min: Array,
+    w_max: Array,
+    ctx: AnalogCtx,
+) -> Array:
+    """The framework-wide analog-aware matmul. x: (..., K), w: (K, N)."""
+    cfg = ctx.cfg
+    if cfg.mode == DIGITAL:
+        return jnp.matmul(x, w.astype(x.dtype))
+
+    # fake-quant promotes to f32 (range params are f32); keep the analog
+    # chain in f32 internally and restore the caller's dtype at the end
+    out_dtype = x.dtype
+    spec = cfg.spec
+    if cfg.mode == ANALOG_TRAIN:
+        w_key = ctx.next_key()
+        w_eff = noise_lib.inject(w_key, w, cfg.eta, w_min, w_max)
+        qn_key_in = ctx.next_key() if spec.quant_noise_p < 1.0 else None
+        qn_key_out = ctx.next_key() if spec.quant_noise_p < 1.0 else None
+        x_q = quant_lib.dac_quantize(
+            x, r_adc, ctx.gain_s, w_max, spec, qn_key_in
+        )
+        # quantized activations/weights live on a <=2^b_dac-level grid:
+        # exactly representable in bf16 -- keeping the inter-quantizer chain
+        # in f32 doubles both HBM traffic and the FSDP weight-gather volume
+        x_q = x_q.astype(out_dtype)
+        if cfg.use_kernel:
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.analog_mvm(
+                x_q,
+                w_eff.astype(x_q.dtype),
+                r_adc=jnp.abs(r_adc),
+                bits=spec.b_adc,
+                tile_rows=cfg.tile_rows,
+                per_tile_adc=cfg.per_tile_adc,
+                interpret=cfg.interpret,
+            ).astype(out_dtype)
+        return _tile_matmul_quant(
+            x_q,
+            w_eff.astype(x_q.dtype),
+            r_adc,
+            spec,
+            cfg.tile_rows,
+            cfg.per_tile_adc,
+            qn_key_out,
+        ).astype(out_dtype)
+
+    if cfg.mode == PCM_INFER:
+        w_key = ctx.next_key()
+        if w_key is None:
+            raise ValueError("pcm_infer requires an RNG key in the AnalogCtx")
+        w_c = jnp.clip(w, w_min, w_max)
+        w_eff, gdc = pcm_lib.simulate_weights(
+            w_key, w_c.astype(jnp.float32), cfg.t_seconds, cfg.pcm
+        )
+        x_q = quant_lib.dac_quantize(x, r_adc, ctx.gain_s, w_max, spec, None)
+        x_q = x_q.astype(out_dtype)
+        return _tile_matmul_quant(
+            x_q,
+            w_eff.astype(x_q.dtype),
+            r_adc,
+            spec,
+            cfg.tile_rows,
+            cfg.per_tile_adc,
+            None,
+            out_scale=gdc,
+        ).astype(out_dtype)
+
+    raise ValueError(f"unknown analog mode: {cfg.mode}")
+
+
+# ---------------------------------------------------------------------------
+# Layer wrappers (parameter containers). The framework's module system is
+# functional: ``init`` returns a param pytree, ``apply`` consumes it.
+# Buffers (non-trainable) use the ``_buf`` suffix; the optimizer masks them.
+# ---------------------------------------------------------------------------
+
+
+def linear_init(
+    key: Array,
+    d_in: int,
+    d_out: int,
+    *,
+    use_bias: bool = False,
+    dtype=jnp.float32,
+    scale: float | None = None,
+) -> dict:
+    w_key, _ = jax.random.split(key)
+    s = scale if scale is not None else d_in**-0.5
+    params = {
+        "w": (jax.random.normal(w_key, (d_in, d_out), jnp.float32) * s).astype(dtype),
+        "r_adc": jnp.ones((), jnp.float32),
+        "w_clip_buf": jnp.array([-1.0, 1.0], jnp.float32),  # set by stage-1
+    }
+    if use_bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+    return params
+
+
+def linear_apply(params: dict, x: Array, ctx: AnalogCtx) -> Array:
+    w_min = params["w_clip_buf"][..., 0]
+    w_max = params["w_clip_buf"][..., 1]
+    y = analog_matmul(
+        x,
+        params["w"],
+        r_adc=params["r_adc"],
+        w_min=w_min,
+        w_max=w_max,
+        ctx=ctx,
+    )
+    if "b" in params:
+        # Bias is applied in the digital domain, after the ADC (paper Sec. 3.1).
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def refresh_clip_ranges(params: dict, n_std: float = 2.0) -> dict:
+    """Stage-1 helper: recompute every layer's static clip range from std(W).
+
+    Walks an arbitrary param pytree and updates each ``w_clip_buf`` from its
+    sibling ``w``. Called every 10 steps in stage 1, then frozen for stage 2.
+    """
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            new = {k: walk(v) for k, v in tree.items()}
+            if "w" in new and "w_clip_buf" in new:
+                w = new["w"]
+                # Per-layer scalar ranges; for stacked (scanned) layers keep
+                # one range per layer: reduce over all but the leading stack
+                # axis if the buffer is stacked.
+                buf = new["w_clip_buf"]
+                if buf.ndim == 1:  # unstacked: shape (2,)
+                    std = jnp.std(w)
+                    new["w_clip_buf"] = jnp.stack([-n_std * std, n_std * std])
+                else:  # stacked: shape (L, 2)
+                    axes = tuple(range(1, w.ndim))
+                    std = jnp.std(w, axis=axes)
+                    new["w_clip_buf"] = jnp.stack(
+                        [-n_std * std, n_std * std], axis=-1
+                    )
+            return new
+        return tree
+
+    return walk(params)

@@ -1,0 +1,85 @@
+"""Noise-injection training utilities (paper Sec. 4.2, Eq. 1-2).
+
+At every forward pass a fresh additive i.i.d. Gaussian error is drawn for each
+analog layer's weights:
+
+    dW_l ~ N(0, sigma_{N,l}^2 I),    sigma_{N,l} = eta * W_{l,max}     (Eq. 1)
+
+with static clipping
+
+    W_l = clip(W_{l,0}; W_{l,min}, W_{l,max})                          (Eq. 2)
+
+whose ranges are frozen at +/- 2*std(W_{l,0}) after the first training stage.
+Both the clip and the noise are wrapped in straight-through estimators so the
+gradient is computed with the clipped+noisy weights but applied to W_{l,0}.
+
+Noise sampling is counter-based (threefry): a per-layer, per-step key makes the
+draw deterministic, shard-stable under pjit (each device samples only its
+shard) and bit-identical between the forward pass and any rematerialised
+backward recomputation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def clip_ste(w: Array, w_min: Array, w_max: Array) -> Array:
+    """Clip with a straight-through gradient.
+
+    The paper computes gradients "with clipped and noise-perturbed weights"
+    and applies them to W_{l,0}: the clip must not zero gradients outside the
+    range, so we pass the gradient straight through.
+    """
+    return w + jax.lax.stop_gradient(jnp.clip(w, w_min, w_max) - w)
+
+
+def sample_weight_noise(key: Array, w: Array, eta: float, w_max: Array) -> Array:
+    """Draw dW ~ N(0, (eta*W_max)^2) in w's dtype (Eq. 1)."""
+    sigma = eta * jnp.abs(w_max)
+    return (sigma * jax.random.normal(key, w.shape, dtype=jnp.float32)).astype(
+        w.dtype
+    )
+
+
+def inject(
+    key: Array | None,
+    w: Array,
+    eta: float,
+    w_min: Array,
+    w_max: Array,
+) -> Array:
+    """Full training-time weight path: STE-clip then add Gaussian noise.
+
+    The noise itself is stop-gradiented (it is a constant draw); gradients flow
+    through the clipped weight via the STE.
+    """
+    w_c = clip_ste(w, w_min, w_max)
+    if key is None or eta <= 0.0:
+        return w_c
+    noise = jax.lax.stop_gradient(sample_weight_noise(key, w, eta, w_max))
+    return w_c + noise
+
+
+def clip_ranges_from_std(w: Array, n_std: float = 2.0) -> tuple[Array, Array]:
+    """Stage-1 clipping ranges: [-2*std(W0), +2*std(W0)] (paper Sec. 4.2).
+
+    Returned as (w_min, w_max) scalars. During stage 1 these track the running
+    weights (recomputed every 10 steps); at the stage-1/2 boundary they are
+    frozen and become static buffers.
+    """
+    std = jnp.std(w)
+    return -n_std * std, n_std * std
+
+
+def layer_noise_key(base_key: Array, layer_index: Array | int, step: Array | int) -> Array:
+    """Deterministic per-(layer, step) noise key.
+
+    ``fold_in`` is counter-based, so no RNG state is communicated across
+    devices; under pjit each device evaluates only its weight shard of the
+    resulting normal draw.
+    """
+    return jax.random.fold_in(jax.random.fold_in(base_key, step), layer_index)

@@ -1,0 +1,155 @@
+"""Calibrated PCM statistical model (paper Sec. 6.1, "Accuracy Evaluation").
+
+Implements the doped-Ge2Sb2Te5 mushroom-cell PCM behaviour used by the paper's
+simulator (calibrated on a million-device 90nm array, Nandakumar et al. 2019):
+
+  1. Weight-to-conductance mapping. Clipped weights are rescaled to [-1, 1] by
+     max|W| and split into two arrays of equal size holding the positive and
+     negative parts (differential pair), expressed as fractions of G_max=25uS.
+
+  2. Programming noise:  G_P = G_T + N(0, sigma_P),
+        sigma_P(uS) = max(-1.1731 g^2 + 1.9650 g + 0.2635, 0),  g = G_T/G_max.
+
+  3. Conductance drift:  G_D(t) = G_P * (t / t_c)^(-nu),  t_c = 25 s, with the
+     drift exponent nu drawn per device from a normal distribution
+     (N(0.06, 0.02), truncated at 0 -- see DESIGN.md Sec. 6 for provenance).
+
+  4. 1/f + random-telegraph read noise at MVM time:
+        G ~ N(G_D, sigma_nG(t)),
+        sigma_nG(t) = G_D(t) * Q * sqrt(log((t + t_r) / t_r)),  t_r = 250 ns,
+        Q = min(0.0088 / g^0.65, 0.2).
+
+  5. Global drift compensation (GDC, Joshi et al. 2020): a single digital
+     scalar per layer, the ratio of programmed-time to current summed
+     conductance, applied to the ADC outputs.
+
+Everything is pure-functional jnp so the whole simulator jit/vmaps and can be
+applied to billion-parameter weight pytrees under pjit (the noise draws are
+element-wise and sharding-commutative).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+G_MAX_US = 25.0  # uS, maximal device conductance (paper Appendix C)
+T_C = 25.0  # s, reference time of programming for the drift law
+T_READ = 250e-9  # s, read-noise reference time
+
+
+@dataclasses.dataclass(frozen=True)
+class PCMConfig:
+    g_max: float = G_MAX_US
+    drift_nu_mean: float = 0.06
+    drift_nu_std: float = 0.02
+    programming_noise: bool = True
+    drift: bool = True
+    read_noise: bool = True
+    gdc: bool = True  # global drift compensation
+
+
+def weights_to_conductances(w: Array) -> tuple[Array, Array, Array]:
+    """Rescale W to [-1,1] and split into differential (G+, G-) fractions.
+
+    Returns (g_pos, g_neg, w_scale) with g_* in [0, 1] (fraction of G_max) and
+    ``w_scale = max|W|`` such that W = (g_pos - g_neg) * w_scale.
+    """
+    w_scale = jnp.max(jnp.abs(w)) + 1e-12
+    g = w / w_scale
+    return jnp.maximum(g, 0.0), jnp.maximum(-g, 0.0), w_scale
+
+
+def programming_noise_sigma(g_frac: Array, g_max: float = G_MAX_US) -> Array:
+    """sigma_P in *fraction-of-G_max* units for target fraction g_frac."""
+    sigma_us = jnp.maximum(
+        -1.1731 * g_frac**2 + 1.9650 * g_frac + 0.2635, 0.0
+    )
+    return sigma_us / g_max
+
+
+def program(key: Array, g_target: Array, cfg: PCMConfig = PCMConfig()) -> Array:
+    """Apply programming (write) noise to target conductance fractions."""
+    if not cfg.programming_noise:
+        return g_target
+    sigma = programming_noise_sigma(g_target, cfg.g_max)
+    g = g_target + sigma * jax.random.normal(key, g_target.shape, jnp.float32)
+    return jnp.clip(g, 0.0, 1.2)  # devices cannot go below 0; slight overshoot ok
+
+
+def drift(key: Array, g_prog: Array, t_seconds: Array, cfg: PCMConfig = PCMConfig()) -> Array:
+    """Conductance drift G_D = G_P (t/t_c)^-nu with per-device nu."""
+    if not cfg.drift:
+        return g_prog
+    nu = cfg.drift_nu_mean + cfg.drift_nu_std * jax.random.normal(
+        key, g_prog.shape, jnp.float32
+    )
+    nu = jnp.maximum(nu, 0.0)
+    t = jnp.maximum(t_seconds, T_C)  # drift law defined for t >= t_c
+    return g_prog * (t / T_C) ** (-nu)
+
+
+def read_noise_sigma(g_drifted: Array, g_target: Array, t_seconds: Array) -> Array:
+    """Instantaneous 1/f read-noise sigma at time t (fractions of G_max)."""
+    q = jnp.minimum(0.0088 / jnp.maximum(g_target, 1e-9) ** 0.65, 0.2)
+    scale = jnp.sqrt(jnp.log((t_seconds + T_READ) / T_READ))
+    return g_drifted * q * scale
+
+
+def read(
+    key: Array,
+    g_drifted: Array,
+    g_target: Array,
+    t_seconds: Array,
+    cfg: PCMConfig = PCMConfig(),
+) -> Array:
+    """Sample effective conductances at MVM time (adds 1/f read noise)."""
+    if not cfg.read_noise:
+        return g_drifted
+    sigma = read_noise_sigma(g_drifted, g_target, t_seconds)
+    g = g_drifted + sigma * jax.random.normal(key, g_drifted.shape, jnp.float32)
+    return jnp.maximum(g, 0.0)
+
+
+def gdc_scale(g_target: Array, g_now: Array) -> Array:
+    """Global drift compensation factor: sum(G_T)/sum(G_now) (one scalar)."""
+    return jnp.sum(g_target) / (jnp.sum(g_now) + 1e-12)
+
+
+def simulate_weights(
+    key: Array,
+    w: Array,
+    t_seconds: float | Array,
+    cfg: PCMConfig = PCMConfig(),
+) -> tuple[Array, Array]:
+    """Full device chain: W -> (program -> drift -> read) -> effective W.
+
+    Returns (w_eff, gdc) where ``w_eff`` already includes all conductance
+    noise processes mapped back to weight units, and ``gdc`` is the layer's
+    global-drift-compensation scalar (apply to the MVM *output* digitally, as
+    the hardware does; multiplying weights by it here would be equivalent for
+    a linear layer but we keep the faithful structure).
+    """
+    t = jnp.asarray(t_seconds, jnp.float32)
+    g_pos_t, g_neg_t, w_scale = weights_to_conductances(w)
+    k_pp, k_pn, k_dp, k_dn, k_rp, k_rn = jax.random.split(key, 6)
+
+    g_pos = program(k_pp, g_pos_t, cfg)
+    g_neg = program(k_pn, g_neg_t, cfg)
+    g_pos = drift(k_dp, g_pos, t, cfg)
+    g_neg = drift(k_dn, g_neg, t, cfg)
+    # GDC is computed from the drifted (readout) conductances, before the
+    # instantaneous read fluctuation of the actual inference MVM.
+    if cfg.gdc:
+        scale = gdc_scale(g_pos_t + g_neg_t, g_pos + g_neg)
+    else:
+        scale = jnp.ones((), jnp.float32)
+    g_pos = read(k_rp, g_pos, g_pos_t, t, cfg)
+    g_neg = read(k_rn, g_neg, g_neg_t, t, cfg)
+
+    w_eff = (g_pos - g_neg) * w_scale
+    return w_eff.astype(w.dtype), scale

@@ -1,0 +1,139 @@
+"""Learnable-range DAC/ADC quantizers with the shared ADC-gain constraint.
+
+Implements the paper's Eq. (3)-(6):
+
+  * symmetric fake-quantizers with straight-through-estimator rounding
+    (Eq. 4, following Jain et al. 2019 "trained quantization thresholds"),
+  * ``b_DAC = b_ADC + 1`` (Eq. 3),
+  * the fixed-ADC-gain constraint ``S = r_DAC,l * W_l,max / r_ADC,l`` for all
+    layers (Eq. 5) -- realised by treating ``S`` (one scalar for the whole
+    network) and ``r_ADC,l`` (one scalar per layer) as the free parameters and
+    *deriving* ``r_DAC,l = r_ADC,l * |S| / W_l,max`` (Eq. 6's gradient falls
+    out of autodiff through this expression, including the |S| subgradient),
+  * stochastic "quant-noise" masking (Fan et al. 2020) with prob. 0.5.
+
+All quantizers are *fake-quant*: they return values in the dequantized domain
+so they compose with ordinary matmuls, and their gradients flow to both the
+input and the range parameter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def round_ste(x: Array) -> Array:
+    """Round-to-nearest with a straight-through gradient (Bengio et al. 2013)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant(x: Array, r_max: Array, bits: int) -> Array:
+    """Symmetric fake-quantization, Eq. (4), differentiable in x and r_max.
+
+    q(x; b) = round_STE( clip(x, -r, r) / (r / (2^(b-1) - 1)) )
+    and we return the *dequantized* value q * step so the op is usable inline.
+    """
+    n_levels = 2 ** (bits - 1) - 1
+    r = jnp.abs(r_max) + 1e-9  # ranges must stay positive; |.| has subgradient
+    step = r / n_levels
+    clipped = jnp.clip(x, -r, r)
+    return round_ste(clipped / step) * step
+
+
+def quant_noise(
+    x: Array,
+    x_quant: Array,
+    key: Optional[Array],
+    prob: float,
+) -> Array:
+    """Fan et al. 2020 "training with quantization noise".
+
+    With probability ``prob`` per element, the quantized value is used;
+    otherwise the full-precision value passes through. ``prob=1`` (or
+    ``key=None``) is plain quantization-aware training.
+    """
+    if key is None or prob >= 1.0:
+        return x_quant
+    mask = jax.random.bernoulli(key, prob, shape=x.shape)
+    return jnp.where(mask, x_quant, x)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static quantizer configuration for one analog layer.
+
+    Attributes:
+      b_adc: ADC effective number of bits. The DAC gets ``b_adc + 1`` (Eq. 3).
+      quant_noise_p: probability of applying quantization per element during
+        training (0.5 in the paper). 1.0 => deterministic fake-quant.
+    """
+
+    b_adc: int = 8
+    quant_noise_p: float = 1.0
+
+    @property
+    def b_dac(self) -> int:
+        return self.b_adc + 1
+
+
+def dac_range(r_adc: Array, gain_s: Array, w_max: Array) -> Array:
+    """Derive the DAC range from the shared-gain constraint (Eq. 5).
+
+    r_DAC,l = r_ADC,l * |S| / W_l,max.  |S| keeps ranges positive when S goes
+    negative during gradient descent (paper Sec. 4.2); its subgradient is the
+    d|S|/dS term of Eq. (6), handled by autodiff.
+    """
+    return jnp.abs(r_adc) * jnp.abs(gain_s) / (jnp.abs(w_max) + 1e-9)
+
+
+def dac_quantize(
+    x: Array,
+    r_adc: Array,
+    gain_s: Array,
+    w_max: Array,
+    spec: QuantSpec,
+    key: Optional[Array] = None,
+) -> Array:
+    """Quantize input activations as the PWM DAC would (Eq. 3/4/5)."""
+    r_dac = dac_range(r_adc, gain_s, w_max)
+    xq = fake_quant(x, r_dac, spec.b_dac)
+    return quant_noise(x, xq, key, spec.quant_noise_p)
+
+
+def adc_quantize(
+    y: Array,
+    r_adc: Array,
+    spec: QuantSpec,
+    key: Optional[Array] = None,
+) -> Array:
+    """Quantize pre-activations as the bitline ADC would."""
+    yq = fake_quant(y, r_adc, spec.b_adc)
+    return quant_noise(y, yq, key, spec.quant_noise_p)
+
+
+def init_quant_params(n_layers_or_shape=()) -> dict:
+    """Trainable quantizer parameters: per-layer r_adc and one global S.
+
+    Both are initialised at 1.0 per the paper.  For scanned layer stacks pass
+    the leading stack shape, e.g. ``init_quant_params((n_layers,))``.
+    """
+    shape = (
+        (n_layers_or_shape,)
+        if isinstance(n_layers_or_shape, int)
+        else tuple(n_layers_or_shape)
+    )
+    return {
+        "r_adc": jnp.ones(shape, dtype=jnp.float32),
+        "gain_s": jnp.ones((), dtype=jnp.float32),
+    }
+
+
+def clip_s_gradient(grad_s: Array, threshold: float = 0.01) -> Array:
+    """Gradient clipping on S (paper uses 0.01) to stabilise its update."""
+    return jnp.clip(grad_s, -threshold, threshold)

@@ -1,0 +1,3 @@
+"""Deterministic, restartable data pipelines."""
+
+from repro.data.pipeline import PipelineConfig, batch_at, iterate  # noqa: F401

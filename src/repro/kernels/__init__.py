@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  * analog_mvm       -- fused DAC-quant -> crossbar-tiled MVM -> per-tile ADC
+                        (ops.py: jit wrapper + STE custom VJP; ref.py: oracle)
+  * flash_attention  -- online-softmax attention forward; removes the
+                        dominant HBM stream of every attention-heavy cell
+
+Both validate in interpret mode on CPU (tests/test_kernels.py); TPU is the
+execution target (BlockSpec VMEM tiling, MXU-aligned).
+"""
+
+from repro.kernels.ops import analog_mvm  # noqa: F401

@@ -1,0 +1,124 @@
+"""jit'd public wrapper for the analog MVM kernel, with an STE custom VJP.
+
+Forward runs the fused Pallas kernel (analog_mvm.py); backward differentiates
+the pure-jnp oracle (ref.py), whose clip/round_STE structure *is* the paper's
+training rule (Sec. 4.2): gradients are computed with quantized values but
+pass straight through the rounding, and clip boundaries gate the range
+gradients. Using the oracle's VJP guarantees fwd/bwd consistency with the
+reference to the last ulp of the STE semantics.
+
+Batched inputs (..., K) are flattened to (M, K) around the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.analog_mvm import analog_mvm_fwd
+from repro.kernels.ref import analog_mvm_ref
+
+Array = jax.Array
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(4, 5, 6, 7, 8, 9),
+)
+def _analog_mvm_2d(
+    x: Array,
+    w: Array,
+    r_dac: Array,
+    r_adc: Array,
+    b_dac: int,
+    b_adc: int,
+    tile_rows: int,
+    per_tile_adc: bool,
+    apply_dac: bool,
+    interpret: bool,
+) -> Array:
+    return analog_mvm_fwd(
+        x,
+        w,
+        r_dac,
+        r_adc,
+        b_dac=b_dac,
+        b_adc=b_adc,
+        tile_rows=tile_rows,
+        per_tile_adc=per_tile_adc,
+        apply_dac=apply_dac,
+        interpret=interpret,
+    )
+
+
+def _fwd(x, w, r_dac, r_adc, b_dac, b_adc, tile_rows, per_tile_adc, apply_dac, interpret):
+    y = _analog_mvm_2d(
+        x, w, r_dac, r_adc, b_dac, b_adc, tile_rows, per_tile_adc, apply_dac, interpret
+    )
+    return y, (x, w, r_dac, r_adc)
+
+
+def _bwd(b_dac, b_adc, tile_rows, per_tile_adc, apply_dac, interpret, res, g):
+    x, w, r_dac, r_adc = res
+    _, vjp = jax.vjp(
+        lambda x_, w_, rd_, ra_: analog_mvm_ref(
+            x_,
+            w_,
+            rd_,
+            ra_,
+            b_dac=b_dac,
+            b_adc=b_adc,
+            tile_rows=tile_rows,
+            per_tile_adc=per_tile_adc,
+            apply_dac=apply_dac,
+        ),
+        x,
+        w,
+        r_dac,
+        r_adc,
+    )
+    return vjp(g)
+
+
+_analog_mvm_2d.defvjp(_fwd, _bwd)
+
+
+def analog_mvm(
+    x: Array,
+    w: Array,
+    *,
+    r_adc: Array,
+    r_dac: Array | None = None,
+    bits: int = 8,
+    tile_rows: int = 1024,
+    per_tile_adc: bool = True,
+    interpret: bool = False,
+) -> Array:
+    """Fused analog MVM for (..., K) x (K, N).
+
+    ``bits`` is the ADC ENOB; the DAC gets one extra bit (paper Eq. 3). When
+    ``r_dac`` is None the input is assumed pre-quantized (the analog.py path
+    quantizes inputs with quant-noise masking outside the kernel) and the DAC
+    stage inside the kernel is statically disabled.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    apply_dac = r_dac is not None
+    if r_dac is None:
+        r_dac = jnp.ones((), jnp.float32)
+    y = _analog_mvm_2d(
+        x2,
+        w,
+        jnp.asarray(r_dac, jnp.float32),
+        jnp.asarray(r_adc, jnp.float32),
+        bits + 1,
+        bits,
+        tile_rows,
+        per_tile_adc,
+        apply_dac,
+        interpret,
+    )
+    return y.reshape(*lead, w.shape[-1])

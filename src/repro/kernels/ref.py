@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the fused analog-CiM MVM kernel.
+
+Semantics (the compute hot-spot of every analog layer, cf. analog.py):
+
+    x_q       = fake_quant(x, r_dac, b_dac)            # PWM DAC
+    partial_t = x_q[:, t*R:(t+1)*R] @ w[t*R:(t+1)*R]   # one crossbar row-tile
+    y         = sum_t fake_quant(partial_t, r_adc, b_adc)   # per-tile ADC
+                                                            # + digital accum
+
+With ``per_tile_adc=False`` the ADC quantizes the fully-accumulated sum
+instead (single-tile layers / idealized ADC).
+
+The rounding uses straight-through gradients so this reference is also the
+autodiff rule for the Pallas kernel's custom VJP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import fake_quant
+
+Array = jax.Array
+
+
+def analog_mvm_ref(
+    x: Array,
+    w: Array,
+    r_dac: Array,
+    r_adc: Array,
+    *,
+    b_dac: int = 9,
+    b_adc: int = 8,
+    tile_rows: int = 1024,
+    per_tile_adc: bool = True,
+    apply_dac: bool = True,
+) -> Array:
+    """x: (M, K), w: (K, N) -> (M, N), float32 accumulation."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    x_q = fake_quant(x, r_dac, b_dac) if apply_dac else x
+
+    if not per_tile_adc or k <= tile_rows:
+        y = jnp.matmul(x_q, w, preferred_element_type=jnp.float32)
+        return fake_quant(y, r_adc, b_adc).astype(x.dtype)
+
+    n_tiles = -(-k // tile_rows)
+    pad = n_tiles * tile_rows - k
+    if pad:
+        x_q = jnp.pad(x_q, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    xt = x_q.reshape(m, n_tiles, tile_rows)
+    wt = w.reshape(n_tiles, tile_rows, n)
+    partials = jnp.einsum("mtk,tkn->mtn", xt, wt, preferred_element_type=jnp.float32)
+    partials = fake_quant(partials, r_adc, b_adc)
+    return jnp.sum(partials, axis=1).astype(x.dtype)

@@ -1,0 +1,1 @@
+"""Meshes, sharding rules, step functions, launchers."""

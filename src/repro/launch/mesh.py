@@ -1,0 +1,25 @@
+"""Production meshes (a function, never module-level state: importing this
+module must not touch jax device initialisation)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading pod axis.
+
+    Axes: ``data`` carries batch + FSDP sharding; ``model`` carries tensor /
+    expert parallelism; ``pod`` (multi-pod) extends data parallelism across
+    the inter-pod links (DCN-ish: gradient reduction only).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 2):
+    """Tiny mesh over however many (CPU) devices exist -- used by tests."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,303 @@
+"""Sharding rules: 2D FSDP x TP parameter layout + batch/cache specs.
+
+Layout (DESIGN.md Sec. 5):
+  * every >=2D weight is sharded on BOTH mesh axes: the tensor-parallel dim
+    over ``model`` (Megatron column/row convention) and the other dim over
+    the FSDP axes (``data``, plus ``pod`` when present) -- ZeRO-3: parameters,
+    gradients and optimizer state all live fully sharded;
+  * activations: batch over (pod, data), heads/ffn/vocab over model;
+  * MoE: expert dim over ``model`` (expert parallelism); dispatch groups over
+    the FSDP axes, so the dispatch/combine einsums lower to all-to-alls;
+  * small vectors (norms, biases, quantizer ranges, S) are replicated.
+
+Rules are *name-based* over the param-tree paths, so they apply uniformly to
+scanned (stacked) and unscanned params: stacked leaves get a leading None.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+# Megatron convention: "column" = output dim over model; "row" = input dim.
+_COLUMN = {"wq", "wk", "wv", "w1", "w3", "in_proj", "gate_proj", "x_proj",
+           "a_gate", "i_gate", "patch_proj"}
+_ROW = {"wo", "w2", "out_proj"}
+
+
+def fsdp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _owner(path) -> tuple[str, str]:
+    """(enclosing module name, leaf name) from a key path."""
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    leaf = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    return parent, leaf
+
+
+def param_pspec(
+    path, aval, mesh: Mesh, cfg: Optional[ModelConfig] = None,
+    inference: bool = False,
+) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``inference``: serving has no optimizer state, so FSDP-sharding weights
+    only buys all-gathers on every step; weights are TP-sharded over
+    ``model`` and replicated over the data axes instead.
+    """
+    parent, leaf = _owner(path)
+    fsdp = fsdp_axes(mesh)
+    if inference:
+        fsdp = ()
+    fsdp_ax: Any = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    shape = aval.shape
+    ndim = len(shape)
+
+    def axis_size(ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            n = 1
+            for a in ax:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[ax]
+
+    def spec(*tail) -> P:
+        # prepend Nones for stacked (scan) leading dims; drop any axis whose
+        # dim is not exactly divisible (pjit input shardings cannot pad --
+        # e.g. mamba2's vocab 50280 % 16 != 0).
+        lead = ndim - len(tail)
+        full = [None] * lead + list(tail)
+        full = [
+            ax if shape[i] % axis_size(ax) == 0 else None
+            for i, ax in enumerate(full)
+        ]
+        return P(*full)
+
+    if leaf.endswith("_buf") or ndim == 0:
+        return P()
+    # --- MoE expert banks: (.., E, in, out) ---
+    if parent in ("moe",) or (ndim >= 3 and leaf in ("w1", "w2", "w3") and _is_expert_bank(path)):
+        if leaf in ("w1", "w3"):
+            return spec("model", fsdp_ax, None)
+        if leaf == "w2":
+            return spec("model", None, fsdp_ax)
+    if leaf == "table":  # embedding (V, M)
+        return spec("model", fsdp_ax)
+    if parent == "lm_head" and leaf == "w":
+        return spec(fsdp_ax, "model")
+    if leaf == "w" and ndim >= 2:
+        if parent in _COLUMN:
+            return spec(fsdp_ax, "model")
+        if parent in _ROW:
+            return spec("model", fsdp_ax)
+        # default 2D weight (router, CNN convs, fc): replicate small ones
+        if _size(shape) >= 1 << 20:
+            return spec(fsdp_ax, "model")
+        return P()
+    if leaf == "conv_w":  # depthwise conv (W, C): channels over model
+        return spec(None, "model")
+    if leaf in ("conv_b",):
+        return spec("model")
+    if leaf == "b" and parent in _COLUMN:
+        return spec("model")
+    # norms, biases, r_adc, gain_s, A_log, D, dt_bias, lambda_p: replicated
+    return P()
+
+
+def _is_expert_bank(path) -> bool:
+    for p in path:
+        if hasattr(p, "key") and str(p.key) == "moe":
+            return True
+    return False
+
+
+def _size(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def param_shardings(
+    params_shape, mesh: Mesh, cfg: Optional[ModelConfig] = None,
+    inference: bool = False, layout: str = "2d",
+):
+    """NamedSharding tree matching an eval_shape'd param tree.
+
+    ``layout="dp"``: right-sized parallelism for small models on the fixed
+    production mesh -- ALL mesh axes act as one FSDP/DP axis; no tensor
+    parallelism, so the per-layer activation collectives of Megatron TP
+    vanish and only parameter gathers + gradient reduce-scatters remain
+    (each O(params), not O(activations)).
+    """
+    if layout == "dp":
+        return _dp_param_shardings(params_shape, mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [
+        NamedSharding(mesh, param_pspec(path, aval, mesh, cfg, inference))
+        for path, aval in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _dp_param_shardings(params_shape, mesh: Mesh):
+    all_axes = tuple(mesh.axis_names)
+    n = 1
+    for a in all_axes:
+        n *= mesh.shape[a]
+
+    def one(path, aval):
+        _, leaf = _owner(path)
+        shape = aval.shape
+        if leaf.endswith("_buf") or len(shape) == 0:
+            return NamedSharding(mesh, P())
+        # fully shard the largest divisible dim over the whole mesh
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] % n == 0 and shape[i] >= n:
+                spec = [None] * len(shape)
+                spec[i] = all_axes
+                return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, a) for p, a in flat]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Data / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_axis(mesh: Mesh, global_batch: int, layout: str = "2d"):
+    """Shard batch over (pod, data) when divisible, else replicate.
+    layout="dp": over ALL mesh axes."""
+    fsdp = tuple(mesh.axis_names) if layout == "dp" else fsdp_axes(mesh)
+    n = 1
+    for a in fsdp:
+        n *= mesh.shape[a]
+    if global_batch % n == 0 and global_batch >= n:
+        return fsdp if len(fsdp) > 1 else fsdp[0]
+    return None
+
+
+def batch_shardings(batch_spec, mesh: Mesh, layout: str = "2d"):
+    """Inputs: tokens/labels (B, S ...), frames/patches (B, S, M)."""
+
+    def one(path, aval):
+        _, leaf = _owner(path)
+        b_ax = batch_axis(mesh, aval.shape[0], layout)
+        if leaf in ("frames", "patches"):
+            return NamedSharding(mesh, P(b_ax, None, None))
+        return NamedSharding(mesh, P(*([b_ax] + [None] * (len(aval.shape) - 1))))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_spec)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, a) for p, a in flat]
+    )
+
+
+def cache_shardings(cache_spec, mesh: Mesh, global_batch: int):
+    """KV caches (.., B, S, kv, hd), SSM states, RG-LRU states.
+
+    Stacked group caches have a leading (n_groups,) dim -> leading None.
+    The batch dim is identified as the axis whose size == global_batch.
+    """
+    b_ax = batch_axis(mesh, global_batch)
+
+    model_n = mesh.shape.get("model", 1)
+
+    def one(aval):
+        shape = aval.shape
+        spec = [None] * len(shape)
+        for i, s in enumerate(shape):
+            if s == global_batch:
+                spec[i] = b_ax
+                # Flash-decode layout: shard the dim right after batch over
+                # the model axis -- KV cache (B, S, kv, hd) -> S (each chip
+                # reads 1/model of the cache; the softmax combines partials
+                # with tiny all-reduces); SSM state (B, H, P, N) -> H;
+                # RG-LRU (B, W) -> W. Falls back one dim when not divisible
+                # (e.g. conv tails (B, 3, C) -> C).
+                for j in (i + 1, i + 2):
+                    if j < len(shape) and shape[j] % model_n == 0:
+                        spec[j] = "model"
+                        break
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_spec)
+
+
+def logical_rules(mesh: Mesh, cfg: Optional[ModelConfig] = None,
+                  layout: str = "2d") -> dict:
+    if layout == "dp":
+        axes = tuple(mesh.axis_names)
+        return {"batch": axes, "heads": None, "ffn": None, "vocab": None,
+                "experts": None, "moe_groups": axes, "kv_heads": None,
+                "seq": None}
+    b_ax = fsdp_axes(mesh)
+    b = b_ax if len(b_ax) > 1 else (b_ax[0] if b_ax else None)
+    model_n = mesh.shape.get("model", 1)
+    rules = {
+        "batch": b,
+        "heads": "model",
+        "ffn": "model",
+        "vocab": "model",
+        "experts": "model",
+        "moe_groups": b,
+        "kv_heads": "model",
+        "seq": "model",  # sequence parallelism on residuals/scan carries
+    }
+    if cfg is not None:
+        # padding a tiny kv-head dim 16x (MQA/GQA with kv < model) makes
+        # GSPMD fall back to involuntary remat; replicate kv instead.
+        if cfg.n_kv_heads and cfg.n_kv_heads % model_n != 0:
+            rules["kv_heads"] = None
+        if cfg.n_heads and cfg.n_heads % model_n != 0:
+            rules["heads"] = None
+    return rules
+
+
+def build_opt_shardings(opt_shape, params_shape, param_shards, mesh):
+    """Optimizer-state shardings mirror the parameter shardings; factored
+    Adafactor stats drop the reduced dim from the spec; scalars replicate."""
+    from repro.training import optim as optim_lib
+
+    def match(state_leaf, param_leaf, param_shard):
+        sshape = state_leaf.shape
+        pshape = param_leaf.shape
+        spec = list(param_shard.spec) + [None] * (len(pshape) - len(param_shard.spec))
+        if sshape == pshape:
+            return param_shard
+        if len(sshape) == 0:
+            return NamedSharding(mesh, P())
+        if sshape == pshape[:-1]:
+            return NamedSharding(mesh, P(*spec[:-1]))
+        if sshape == tuple(pshape[:-2]) + tuple(pshape[-1:]):
+            return NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))
+        return NamedSharding(mesh, P())
+
+    rep = NamedSharding(mesh, P())
+    return optim_lib.OptState(
+        step=rep,
+        m=jax.tree.map(match, opt_shape.m, params_shape, param_shards),
+        v=jax.tree.map(match, opt_shape.v, params_shape, param_shards),
+        v_col=jax.tree.map(match, opt_shape.v_col, params_shape, param_shards),
+    )

@@ -1,0 +1,119 @@
+"""Step functions: train / prefill / serve(decode), pjit-ready.
+
+Factories close over static config (ModelConfig, AnalogConfig, optimizer) and
+return pure functions of (params, opt_state, batch, rng) suitable for
+jax.jit with in/out shardings. The same functions back the real launcher
+(train.py / serve.py) and the dry-run (dryrun.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig
+from repro.models.common import ModelConfig
+from repro.models.lm import lm_forward, lm_loss
+from repro.training import optim as optim_lib
+
+Array = jax.Array
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    analog_cfg: AnalogConfig,
+    opt_cfg: optim_lib.OptimizerConfig,
+    accum_steps: int = 1,
+):
+    """(params, opt_state, batch, rng) -> (params, opt_state, metrics).
+
+    ``accum_steps > 1``: microbatch gradient accumulation via lax.scan --
+    activation memory scales with batch/accum_steps while arithmetic and
+    gradient traffic are unchanged. The standard fit-the-giant-model knob
+    (llama4-maverick train_4k: 33 GiB -> HBM-feasible at accum 4).
+    """
+
+    def loss_for(p, batch, noise_rng):
+        return lm_loss(p, batch, analog_cfg, cfg, rng=noise_rng)
+
+    def train_step(params, opt_state, batch, rng):
+        step_rng = jax.random.fold_in(rng, opt_state.step)
+        noise_rng = step_rng if analog_cfg.mode != "digital" else None
+
+        if accum_steps <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True
+            )(params, batch, noise_rng)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(
+                    (accum_steps, x.shape[0] // accum_steps) + x.shape[1:]
+                ),
+                batch,
+            )
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_for, has_aux=True)(
+                    params, mb, noise_rng
+                )
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {"loss": loss}
+
+        params, opt_state, opt_metrics = optim_lib.update(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics = {**metrics, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, analog_cfg: AnalogConfig):
+    """(params, batch, cache, rng) -> (next_token_logits, cache)."""
+
+    def prefill_step(params, batch, cache, rng):
+        noise_rng = rng if analog_cfg.mode != "digital" else None
+        logits, cache = lm_forward(
+            params,
+            batch,
+            analog_cfg,
+            cfg,
+            rng=noise_rng,
+            cache=cache,
+            last_token_only=True,
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, analog_cfg: AnalogConfig):
+    """One decode step: (params, batch, cache, rng) -> (next_tokens, cache).
+
+    ``batch`` holds the freshly sampled token(s) from the previous step
+    (tokens: (B, 1); frames for the audio family). Greedy argmax sampling.
+    """
+
+    def serve_step(params, batch, cache, rng):
+        noise_rng = rng if analog_cfg.mode != "digital" else None
+        logits, cache = lm_forward(
+            params, batch, analog_cfg, cfg, rng=noise_rng, cache=cache
+        )
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tokens, cache
+
+    return serve_step

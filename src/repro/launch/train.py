@@ -1,0 +1,101 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the paper's two-stage methodology on any registered architecture at a
+CPU-feasible scale (reduced configs by default; pass --full on real hardware).
+On a TPU cluster this same entry point runs under multi-host JAX with the
+production mesh; on CPU it uses whatever devices exist.
+
+Examples:
+  python -m repro.launch.train --arch tinyllama-1.1b --steps 50 --smoke
+  python -m repro.launch.train --arch analognet-kws --stage1 150 --stage2 150
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.analog import AnalogConfig
+from repro.data.pipeline import PipelineConfig, iterate
+from repro.models import analognet, lm
+from repro.training.loop import TrainConfig, run_two_stage
+
+
+def lm_setup(arch: str, smoke: bool, batch: int, seq: int):
+    cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    pipe = PipelineConfig(
+        kind="lm", global_batch=batch, seq_len=seq, vocab=cfg.vocab
+    )
+
+    def loss_fn(p, b, acfg, rng):
+        return lm.lm_loss(p, b, acfg, cfg, rng=rng)
+
+    return params, loss_fn, iterate(pipe)
+
+
+def cnn_setup(arch: str, batch: int):
+    cfg = configs.get(arch)
+    params = analognet.cnn_init(jax.random.PRNGKey(0), cfg)
+    pipe = PipelineConfig(
+        kind="kws",
+        global_batch=batch,
+        n_classes=cfg.n_classes,
+        input_hw=cfg.input_hw,
+        channels=cfg.in_channels,
+    )
+
+    def loss_fn(p, b, acfg, rng):
+        return analognet.cnn_loss(p, b, acfg, cfg, rng=rng)
+
+    return params, loss_fn, iterate(pipe)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(configs.ALL_ARCHS))
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (requires real accelerators)")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--stage1", type=int, default=100)
+    ap.add_argument("--stage2", type=int, default=100)
+    ap.add_argument("--eta", type=float, default=0.1)
+    ap.add_argument("--b-adc", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--history-out", default=None)
+    args = ap.parse_args()
+
+    if args.arch in configs.CNN_ARCHS:
+        params, loss_fn, batches = cnn_setup(args.arch, args.batch)
+    else:
+        params, loss_fn, batches = lm_setup(
+            args.arch, not args.full, args.batch, args.seq
+        )
+
+    tcfg = TrainConfig(
+        stage1_steps=args.stage1,
+        stage2_steps=args.stage2,
+        eta=args.eta,
+        b_adc=args.b_adc,
+        lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+    )
+    params, history = run_two_stage(
+        loss_fn, params, batches, tcfg,
+        on_metrics=lambda i, m: print(json.dumps(m)),
+    )
+    if args.history_out:
+        with open(args.history_out, "w") as f:
+            json.dump(history, f, indent=1)
+    print(f"done: {len(history)} log points; final loss "
+          f"{history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

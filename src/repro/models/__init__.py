@@ -1,0 +1,23 @@
+"""Model zoo: the 10-arch LM family + the paper's TinyML CNNs."""
+
+from repro.models.common import ModelConfig, set_logical_rules  # noqa: F401
+from repro.models.lm import (  # noqa: F401
+    LMParams,
+    init_lm_cache,
+    lm_forward,
+    lm_init,
+    lm_loss,
+)
+from repro.models.analognet import (  # noqa: F401
+    CNNConfig,
+    analognet_kws_config,
+    analognet_vww_config,
+    cnn_apply,
+    cnn_init,
+    cnn_loss,
+    layer_shapes,
+)
+from repro.models.micronet import (  # noqa: F401
+    micronet_kws_s_config,
+    micronet_layer_shapes,
+)

@@ -1,0 +1,297 @@
+"""Attention: GQA projections (analog-mapped) + digital score/value compute.
+
+Three execution paths, selected by input shape/cache:
+  * training / short prefill  -- chunked online-softmax ("flash"-style) scan,
+    O(chunk^2) live memory instead of O(S^2): mandatory at 32k context;
+  * decode                    -- one query token against a KV cache;
+  * local (sliding-window)    -- banded variant used by recurrentgemma.
+
+Per the paper's hardware model, Q/K/V/O *projections* are stationary-weight
+matmuls (analog-CiM-mapped via AnalogLinear); the QK^T and AV products have
+two dynamic operands and cannot live in NVM crossbars -- they execute on the
+digital datapath (DESIGN.md SecArch-applicability). On TPU both are MXU
+matmuls; the distinction matters for the AON-CiM energy model only.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogCtx, linear_apply, linear_init
+from repro.models.common import ModelConfig, rope, shard
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: Array  # (B, S_max, n_kv, hd)
+    v: Array  # (B, S_max, n_kv, hd)
+    length: Array  # () int32 -- tokens already written
+
+
+def attn_init(key: Array, cfg: ModelConfig) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    return {
+        "wq": linear_init(kq, cfg.d_model, nh * hd, use_bias=cfg.qkv_bias),
+        "wk": linear_init(kk, cfg.d_model, nkv * hd, use_bias=cfg.qkv_bias),
+        "wv": linear_init(kv, cfg.d_model, nkv * hd, use_bias=cfg.qkv_bias),
+        "wo": linear_init(ko, nh * hd, cfg.d_model),
+    }
+
+
+def _split_heads(x: Array, n: int, hd: int) -> Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _gqa_scores(q: Array, k: Array) -> Array:
+    """q: (B, Sq, H, D), k: (B, Sk, Kv, D) -> (B, Kv, G, Sq, Sk)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    return jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32
+    )
+
+
+def _gqa_values(p: Array, v: Array) -> Array:
+    """p: (B, Kv, G, Sq, Sk), v: (B, Sk, Kv, D) -> (B, Sq, H, D).
+
+    p is cast down to v's dtype (not v up to f32 -- that would materialise an
+    f32 copy of the entire KV cache); accumulation stays f32 on the MXU.
+    """
+    b, kv, g, sq, sk = p.shape
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd",
+        p.astype(v.dtype),
+        v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, sq, kv * g, v.shape[-1])
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    q_chunk: int,
+    kv_chunk: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int | Array = 0,
+) -> Array:
+    """Online-softmax attention, O(q_chunk * kv_chunk) live score memory.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Kv, D). GQA by head grouping. ``window``
+    bounds attention to the last ``window`` positions (local attention).
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = d**-0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    sq_p = -(-sq // q_chunk) * q_chunk
+    sk_p = -(-sk // kv_chunk) * kv_chunk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    sk_valid, sq_orig = sk, sq
+    sq, sk = sq_p, sk_p
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    kvh = k.shape[2]
+    g = h // kvh
+
+    qs = q.reshape(b, nq, q_chunk, h, d).swapaxes(0, 1)  # (nq, B, qc, H, D)
+    ks = k.reshape(b, nk, kv_chunk, kvh, d).swapaxes(0, 1)
+    vs = v.reshape(b, nk, kv_chunk, kvh, d).swapaxes(0, 1)
+
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(kv_chunk)
+
+    @jax.checkpoint
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc
+        q_pos = q_offset + qi * q_chunk + q_pos_base  # (qc,)
+
+        # Flash-style backward: without rematerialisation lax.scan saves the
+        # (B, Kv, G, qc, kc) probability tensor of EVERY kv step for the VJP
+        # -- O(S^2) residant memory, exactly what chunking is meant to avoid.
+        # Checkpointing the body recomputes p in the backward pass.
+        @jax.checkpoint
+        def kv_step(carry, ki_kc):
+            m, l, acc = carry
+            ki, kc, vc = ki_kc
+            s = _gqa_scores(qc, kc) * scale  # (B, Kv, G, qc, kc) f32
+            k_pos = ki * kv_chunk + k_pos_base
+            mask = k_pos[None, :] < sk_valid  # padded kv positions
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            mask = jnp.broadcast_to(mask, (q_chunk, kv_chunk))
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            # PV product with bf16 operands + f32 MXU accumulation: keeping
+            # p (B,Kv,G,qc,kc) in f32 and upcasting v doubles the dominant
+            # HBM stream of the whole training step (measured 0.8 TB/dev on
+            # tinyllama train_4k); max/exp/l stay f32 elementwise.
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd",
+                p.astype(vc.dtype),
+                vc,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, Kv, G, qc, D)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h, d)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = outs.swapaxes(0, 1).reshape(b, sq, h, d)
+    return out[:, :sq_orig]
+
+
+def decode_attention(
+    q: Array, cache: KVCache, *, rolling: bool = False
+) -> Array:
+    """One-token attention against the cache. q: (B, 1, H, D).
+
+    ``rolling``: the cache is a circular window buffer (local attention);
+    every written slot is by construction within the window, so validity is
+    simply "slot has been written".
+    """
+    b, _, h, d = q.shape
+    s_max = cache.k.shape[1]
+    scale = d**-0.5
+    s = _gqa_scores(q, cache.k) * scale  # (B, Kv, G, 1, S_max)
+    pos = jnp.arange(s_max)
+    if rolling:
+        valid = pos[None, :] < jnp.minimum(cache.length, s_max)
+    else:
+        valid = pos[None, :] < cache.length
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_values(p, cache.v).astype(q.dtype)
+
+
+def attn_apply(
+    params: dict,
+    x: Array,
+    ctx: AnalogCtx,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    cache: Optional[KVCache] = None,
+    window: Optional[int] = None,
+    layer_idx: Optional[int] = None,
+) -> tuple[Array, Optional[KVCache]]:
+    """Full attention block. x: (B, S, M). Returns (out, updated_cache).
+
+    ``layer_idx`` (static int): ``cache`` is layer-stacked (L, B, S, kv, hd);
+    the new token is written in place into the stacked buffer and attention
+    reads a fused view -- no per-step cache copy (decode fast path).
+    """
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = _split_heads(linear_apply(params["wq"], x, ctx), nh, hd)
+    k = _split_heads(linear_apply(params["wk"], x, ctx), nkv, hd)
+    v = _split_heads(linear_apply(params["wv"], x, ctx), nkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    s_cache = (
+        cache.k.shape[2] if (cache is not None and layer_idx is not None)
+        else (cache.k.shape[1] if cache is not None else 0)
+    )
+    rolling = window is not None and s_cache <= window
+    if cache is not None and s == 1 and layer_idx is not None:
+        # stacked decode fast path: in-place write into (L, B, S, kv, hd)
+        ln = cache.length[layer_idx]
+        idx = ln % s_cache if rolling else ln
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k[None].astype(cache.k.dtype), (layer_idx, 0, idx, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v[None].astype(cache.v.dtype), (layer_idx, 0, idx, 0, 0)
+        )
+        new_len = cache.length.at[layer_idx].add(1)
+        layer_cache = KVCache(ck[layer_idx], cv[layer_idx], ln + 1)
+        new_cache = KVCache(ck, cv, new_len)
+        out = decode_attention(q, layer_cache, rolling=rolling)
+    elif cache is not None and s == 1:
+        # decode: append to cache (circular slot for window buffers)
+        idx = cache.length % s_cache if rolling else cache.length
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
+        new_cache = KVCache(ck, cv, cache.length + 1)
+        out = decode_attention(q, new_cache, rolling=rolling)
+    elif cache is not None:
+        # prefill: write the prefix (for window buffers, only the last
+        # ``s_cache`` keys, placed at their position-mod-window slots so
+        # subsequent decode writes keep the circular invariant)
+        if rolling and s >= s_cache:
+            k_t, v_t = k[:, -s_cache:], v[:, -s_cache:]
+            ck = jnp.roll(k_t, s % s_cache, axis=1)
+            cv = jnp.roll(v_t, s % s_cache, axis=1)
+        elif rolling:
+            ck = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0))
+        else:
+            ck = jax.lax.dynamic_update_slice(cache.k, k, (0, cache.length, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v, (0, cache.length, 0, 0))
+        new_cache = KVCache(ck, cv, cache.length + s)
+        out = chunked_attention(
+            q,
+            k,
+            v,
+            q_chunk=cfg.attn_chunk_q,
+            kv_chunk=cfg.attn_chunk_kv,
+            causal=True,
+            window=window,
+            q_offset=0,
+        )
+    else:
+        out = chunked_attention(
+            q,
+            k,
+            v,
+            q_chunk=cfg.attn_chunk_q,
+            kv_chunk=cfg.attn_chunk_kv,
+            causal=True,
+            window=window,
+        )
+    out = out.reshape(b, s, nh * hd)
+    return linear_apply(params["wo"], out, ctx), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> KVCache:
+    shape = (batch, s_max, cfg.n_kv_heads, cfg.hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,149 @@
+"""RecurrentGemma / Griffin recurrent block: RG-LRU + gating (arXiv:2402.19427).
+
+Block structure (the "recurrent block" that alternates 2:1 with local
+attention in recurrentgemma):
+
+    x -> [linear -> gelu]                  (gate branch)
+      -> [linear -> conv1d(4) -> RG-LRU]   (recurrent branch)
+    out = linear(gate * recurrent)
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))         in (0,1), c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the linear recurrence with an associative scan
+(log-depth); decode is the exact one-step update with a carried state. The
+recurrence itself is element-wise (no matmul) -> digital; the three block
+projections and the gates' dense projections are analog-CiM-mapped.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogCtx, linear_apply, linear_init
+from repro.models.common import ModelConfig
+
+Array = jax.Array
+
+_C = 8.0  # Griffin's fixed gate temperature
+
+
+class RGLRUCache(NamedTuple):
+    conv: Array  # (B, W-1, lru_width)
+    h: Array  # (B, lru_width)
+
+
+def griffin_init(key: Array, cfg: ModelConfig) -> dict:
+    m = cfg.d_model
+    w = cfg.lru_width or cfg.d_model
+    kg, kx, ko, ka, ki, kc, kl = jax.random.split(key, 7)
+    return {
+        "gate_proj": linear_init(kg, m, w),
+        "x_proj": linear_init(kx, m, w),
+        "out_proj": linear_init(ko, w, m),
+        "a_gate": linear_init(ka, w, w),  # W_a (recurrence gate)
+        "i_gate": linear_init(ki, w, w),  # W_x (input gate)
+        "conv_w": jax.random.normal(kc, (cfg.conv_width, w), jnp.float32)
+        * (cfg.conv_width * w) ** -0.5,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "lambda_p": jax.random.uniform(
+            kl, (w,), jnp.float32, minval=2.0, maxval=5.0
+        ),  # softplus(Lambda) ~ decay rates; trainable decay rates
+    }
+
+
+def _rg_lru_scan(a: Array, bx: Array, h0: Optional[Array]):
+    """h_t = a_t h_{t-1} + bx_t via associative scan. a, bx: (B, S, W)."""
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_s, bx_s = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    if h0 is not None:
+        bx_s = bx_s + a_s * h0[:, None, :]
+    return bx_s
+
+
+def rg_lru(
+    params: dict,
+    x: Array,
+    ctx: AnalogCtx,
+    h0: Optional[Array],
+) -> tuple[Array, Array]:
+    """RG-LRU over x: (B, S, W). Returns (y, h_final)."""
+    r = jax.nn.sigmoid(linear_apply(params["a_gate"], x, ctx).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear_apply(params["i_gate"], x, ctx).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lambda_p"]) * r  # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    # sqrt(1 - a^2) normalises the input so the state variance is ~constant
+    bx = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12)) * gated_x
+    h = _rg_lru_scan(a, bx, h0)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def _causal_conv(x: Array, w: Array, b: Array, cache: Optional[Array]):
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(width)
+    )
+    new_tail = xp[:, -(width - 1) :, :] if width > 1 else xp[:, :0, :]
+    return y + b.astype(x.dtype), new_tail
+
+
+def griffin_apply(
+    params: dict,
+    x: Array,
+    ctx: AnalogCtx,
+    cfg: ModelConfig,
+    cache: Optional[RGLRUCache] = None,
+) -> tuple[Array, Optional[RGLRUCache]]:
+    """Griffin recurrent block. x: (B, S, M)."""
+    gate = jax.nn.gelu(linear_apply(params["gate_proj"], x, ctx))
+    xr = linear_apply(params["x_proj"], x, ctx)
+    conv_cache = cache.conv if cache is not None else None
+    xr, conv_tail = _causal_conv(xr, params["conv_w"], params["conv_b"], conv_cache)
+    h0 = cache.h if cache is not None else None
+    if x.shape[1] == 1 and cache is not None:
+        # decode: one exact recurrence step
+        r = jax.nn.sigmoid(
+            linear_apply(params["a_gate"], xr, ctx).astype(jnp.float32)
+        )[:, 0]
+        i = jax.nn.sigmoid(
+            linear_apply(params["i_gate"], xr, ctx).astype(jnp.float32)
+        )[:, 0]
+        a = jnp.exp(-_C * jax.nn.softplus(params["lambda_p"]) * r)
+        bx = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12)) * (
+            i * xr[:, 0].astype(jnp.float32)
+        )
+        h_new = a * h0 + bx
+        y = h_new[:, None, :].astype(x.dtype)
+        h_final = h_new
+    else:
+        y, h_final = rg_lru(params, xr, ctx, h0)
+    out = linear_apply(params["out_proj"], gate * y, ctx)
+    new_cache = None
+    if cache is not None:
+        new_cache = RGLRUCache(conv=conv_tail.astype(cache.conv.dtype), h=h_final)
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> RGLRUCache:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        h=jnp.zeros((batch, w), jnp.float32),
+    )

@@ -1,0 +1,97 @@
+"""MicroNet-KWS-S baseline (Banbury et al. 2021) -- the paper's counterexample.
+
+Depthwise-separable backbone reconstructed from the MicroNets family (112-
+channel DW blocks; the paper quotes its second DW layer's CiM utilization as
+1/112 ~ 0.9%). Used by:
+
+  * Appendix A / Fig. 9 -- accuracy collapse of depthwise models on PCM CiM,
+  * Appendix D / Table 3 -- utilization vs crossbar size trade-off, via the
+    sequential group-GEMM splitting scheme (`depthwise_group_shapes`).
+
+Runs through the same cnn_* machinery as the AnalogNets.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.crossbar import LayerShape
+from repro.models.analognet import CNNConfig, ConvSpec
+
+
+def micronet_kws_s_config() -> CNNConfig:
+    c = 112
+    convs = [ConvSpec("stem", 3, 3, 1, c, 2)]
+    for i in range(3):
+        convs.append(ConvSpec(f"dw{i+1}", 3, 3, c, c, 1, depthwise=True))
+        convs.append(ConvSpec(f"pw{i+1}", 1, 1, c, c, 1))
+    return CNNConfig(
+        name="micronet_kws_s",
+        input_hw=(49, 10),
+        in_channels=1,
+        convs=tuple(convs),
+        n_classes=12,
+        fc_width=c,
+    )
+
+
+def depthwise_group_shapes(
+    name: str,
+    kk: int,
+    channels: int,
+    n_patches: int,
+    array_rows: int,
+    array_cols: int,
+) -> list[LayerShape]:
+    """Split a densified DW layer into sequential channel-group GEMMs.
+
+    Appendix D's mitigation: instead of one (kk*C x C) block with 1/C
+    utilization, process groups of n channels as (kk*n x n) diagonal blocks
+    sequentially, n = min(C, array_rows // kk, array_cols). Utilization of
+    each block is 1/n; latency grows with the number of sequential groups
+    (Table 3's trade-off).
+    """
+    n = max(1, min(channels, array_rows // kk, array_cols))
+    groups = math.ceil(channels / n)
+    shapes = []
+    for g in range(groups):
+        c_g = min(n, channels - g * n)
+        shapes.append(
+            LayerShape(
+                f"{name}.g{g}",
+                rows=kk * c_g,
+                cols=c_g,
+                n_patches=n_patches,
+                nnz_rows=kk,
+            )
+        )
+    return shapes
+
+
+def micronet_layer_shapes(
+    cfg: CNNConfig,
+    array_rows: int = 1024,
+    array_cols: int = 512,
+    split_depthwise: bool = True,
+) -> list[LayerShape]:
+    """LayerShapes with the DW splitting scheme applied (Table 3)."""
+    from repro.models.analognet import _spatial_sizes
+
+    shapes: list[LayerShape] = []
+    for spec, (h, w) in zip(cfg.convs, _spatial_sizes(cfg)):
+        kk = spec.kh * spec.kw
+        if spec.depthwise:
+            if split_depthwise:
+                shapes += depthwise_group_shapes(
+                    spec.name, kk, spec.c_in, h * w, array_rows, array_cols
+                )
+            else:
+                shapes.append(
+                    LayerShape(
+                        spec.name, kk * spec.c_in, spec.c_in, h * w, nnz_rows=kk
+                    )
+                )
+        else:
+            shapes.append(LayerShape(spec.name, kk * spec.c_in, spec.c_out, h * w))
+    shapes.append(LayerShape("fc", cfg.fc_width, cfg.n_classes, n_patches=1))
+    return shapes

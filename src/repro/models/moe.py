@@ -1,0 +1,200 @@
+"""Mixture-of-Experts FFN with GShard-style grouped einsum dispatch.
+
+Token dispatch uses capacity-bounded one-hot einsums over *groups* of tokens
+(the Mesh-TF/GShard formulation): tokens are reshaped to (G, S_g, M) with G
+sharded over the data axes and experts sharded over the model axis, so the
+dispatch einsum lowers to an all-to-all under GSPMD -- the canonical
+expert-parallel pattern. Group size bounds the dispatch tensor to
+(G, S_g, E, C) with C = S_g * top_k * capacity_factor / E.
+
+Expert FFNs are stationary-weight matmuls and therefore analog-CiM-mapped:
+each expert's (w1, w3, w2) go through a vmapped AnalogLinear with a per-layer
+shared r_ADC (the paper's per-layer fixed-gain constraint; experts within a
+layer share the physical ADC configuration). The *router* stays digital: it
+is exactly the narrow, noise-sensitive bottleneck the paper removes from its
+models (Sec. 4.1 "small layers are bottlenecks") -- see DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogCtx, analog_matmul
+from repro.models.common import ModelConfig, shard
+
+Array = jax.Array
+
+
+def moe_init(key: Array, cfg: ModelConfig) -> dict:
+    e, m, h = cfg.n_experts, cfg.d_model, cfg.d_ff
+    k1, k2, k3, kr, ks = jax.random.split(key, 5)
+    s_in, s_h = m**-0.5, h**-0.5
+    params = {
+        "router": {"w": jax.random.normal(kr, (m, e), jnp.float32) * s_in},
+        "w1": jax.random.normal(k1, (e, m, h), jnp.float32) * s_in,
+        "w3": jax.random.normal(k3, (e, m, h), jnp.float32) * s_in,
+        "w2": jax.random.normal(k2, (e, h, m), jnp.float32) * s_h,
+        "r_adc": jnp.ones((3,), jnp.float32),  # per matmul family (w1,w3,w2)
+        "w_clip_buf": jnp.tile(jnp.array([-1.0, 1.0], jnp.float32), (3, 1)),
+    }
+    if cfg.shared_expert:
+        from repro.core.analog import linear_init
+
+        ke1, ke2, ke3 = jax.random.split(ks, 3)
+        params["shared"] = {
+            "w1": linear_init(ke1, m, h),
+            "w3": linear_init(ke3, m, h),
+            "w2": linear_init(ke2, h, m),
+        }
+    return params
+
+
+def _expert_ffn(params: dict, x: Array, ctx: AnalogCtx, dtype) -> Array:
+    """x: (E, G, C, M) -> (E, G, C, M); SwiGLU per expert, analog-mapped."""
+
+    def one_expert(w1, w3, w2, clip1, clip3, clip2, xe):
+        h1 = analog_matmul(
+            xe,
+            w1.astype(dtype),
+            r_adc=params["r_adc"][0],
+            w_min=clip1[0],
+            w_max=clip1[1],
+            ctx=ctx,
+        )
+        h3 = analog_matmul(
+            xe,
+            w3.astype(dtype),
+            r_adc=params["r_adc"][1],
+            w_min=clip3[0],
+            w_max=clip3[1],
+            ctx=ctx,
+        )
+        h = jax.nn.silu(h1) * h3
+        return analog_matmul(
+            h,
+            w2.astype(dtype),
+            r_adc=params["r_adc"][2],
+            w_min=clip2[0],
+            w_max=clip2[1],
+            ctx=ctx,
+        )
+
+    clip = params["w_clip_buf"]
+    return jax.vmap(one_expert, in_axes=(0, 0, 0, None, None, None, 0))(
+        params["w1"], params["w3"], params["w2"], clip[0], clip[1], clip[2], x
+    )
+
+
+def _topk_routing(gates: Array, k: int, cap: int):
+    """Iterative top-k with per-expert capacity. gates: (G, Sg, E).
+
+    Returns per-choice lists of: expert index (G,Sg), buffer slot (G,Sg),
+    keep mask (G,Sg), gate value (G,Sg). FLOP cost is O(T*E) -- no one-hot
+    outer products.
+    """
+    g, sg, e = gates.shape
+    idxs, poss, keeps, gvals = [], [], [], []
+    gates_left = gates
+    fills = jnp.zeros((g, e), jnp.int32)
+    for _ in range(k):
+        idx = jnp.argmax(gates_left, axis=-1)  # (g, sg)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)
+        pos_e = jnp.cumsum(onehot, axis=1) - onehot + fills[:, None, :]
+        pos = jnp.take_along_axis(pos_e, idx[..., None], axis=-1)[..., 0]
+        keep = pos < cap
+        gv = jnp.take_along_axis(gates, idx[..., None], axis=-1)[..., 0]
+        idxs.append(idx)
+        poss.append(pos)  # unclamped: OOB slots = dropped tokens
+        keeps.append(keep)
+        gvals.append(gv)
+        fills = fills + onehot.sum(axis=1)
+        gates_left = gates_left * (1.0 - onehot.astype(gates.dtype))
+    return idxs, poss, keeps, gvals
+
+
+def moe_apply(params: dict, x: Array, ctx: AnalogCtx, cfg: ModelConfig) -> Array:
+    """x: (B, S, M) -> (B, S, M)."""
+    b, s, m = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dtype = x.dtype
+    tokens = b * s
+    g = min(cfg.moe_groups, tokens)
+    while tokens % g:
+        g -= 1
+    sg = tokens // g
+    cap = max(1, int(sg * k * cfg.capacity_factor / e))
+
+    xt = x.reshape(g, sg, m)
+    xt = shard(xt, "moe_groups", None, None)
+
+    # --- router (digital, fp32) ---
+    logits = jnp.einsum(
+        "gsm,me->gse", xt.astype(jnp.float32), params["router"]["w"]
+    )
+    gates = jax.nn.softmax(logits, axis=-1)
+
+    # top-k gating with per-expert capacity (GShard): iteratively take the
+    # best expert, mask, repeat. Positions within each expert buffer come
+    # from a cumsum over the token axis.
+    idxs, poss, keeps, gvals = _topk_routing(gates, k, cap)
+    if cfg.moe_dispatch != "scatter":
+        dispatch = jnp.zeros((g, sg, e, cap), dtype)
+        combine = jnp.zeros((g, sg, e, cap), jnp.float32)
+        for idx, pos, keep, gv in zip(idxs, poss, keeps, gvals):
+            e_oh = jax.nn.one_hot(idx, e, dtype=jnp.float32) * keep[..., None]
+            pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)
+            oh = e_oh[..., :, None] * pos_oh[..., None, :]
+            dispatch = dispatch + oh.astype(dtype)
+            combine = combine + oh * gv[..., None, None]
+
+    if cfg.moe_dispatch == "scatter":
+        # Index-based dispatch: the one-hot einsums cost O(T*E*C*M) FLOPs --
+        # at 128 experts that EXCEEDS the expert FFNs themselves (E*C ~
+        # 1.7x of 3*d_ff*top_k on llama4-maverick). Algebraically the same
+        # contraction factorises into a scatter (dispatch) and a gather
+        # (combine) with zero FLOPs.
+        # per-(token, k): target expert idx_k (g, sg) and slot pos_k (g, sg)
+        xe = jnp.zeros((e, g, cap, m), dtype)
+        gi = jnp.arange(g)[:, None]
+        for idx_k, pos_k in zip(idxs, poss):
+            # out-of-capacity positions land out of bounds -> mode="drop"
+            xe = xe.at[idx_k, gi, pos_k].set(xt, mode="drop")
+        xe = shard(xe, "experts", None, None, None)
+        ye = _expert_ffn(params, xe, ctx, dtype)
+        y = jnp.zeros_like(xt)
+        for idx_k, pos_k, keep_k, gv in zip(idxs, poss, keeps, gvals):
+            picked = ye[idx_k, gi, jnp.minimum(pos_k, cap - 1)]  # gather
+            y = y + jnp.where(
+                keep_k[..., None], picked * gv[..., None].astype(dtype), 0
+            )
+        y = shard(y, "moe_groups", None, None)
+    else:
+        # --- dispatch: (G,Sg,E,C) x (G,Sg,M) -> (E,G,C,M): all-to-all under
+        # SPMD (the GShard einsum formulation)
+        xe = jnp.einsum("gsec,gsm->egcm", dispatch, xt)
+        xe = shard(xe, "experts", None, None, None)
+        ye = _expert_ffn(params, xe, ctx, dtype)
+        # --- combine back to token layout ---
+        y = jnp.einsum("gsec,egcm->gsm", combine.astype(dtype), ye)
+        y = shard(y, "moe_groups", None, None)
+
+    if "shared" in params:
+        from repro.core.analog import linear_apply
+
+        sh = params["shared"]
+        h = jax.nn.silu(linear_apply(sh["w1"], xt, ctx)) * linear_apply(
+            sh["w3"], xt, ctx
+        )
+        y = y + linear_apply(sh["w2"], h, ctx)
+
+    return y.reshape(b, s, m)
+
+
+def aux_load_balance_loss(logits: Array, dispatch: Array) -> Array:
+    """Switch-style auxiliary loss (kept for training completeness)."""
+    gates = jax.nn.softmax(logits, axis=-1)
+    density = dispatch.sum(axis=-1).mean(axis=(0, 1))  # per-expert usage
+    density_proxy = gates.mean(axis=(0, 1))
+    e = gates.shape[-1]
+    return e * jnp.sum(density * density_proxy)

@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD, state-space duality) block -- arXiv:2405.21060.
+
+Chunked SSD algorithm: within chunks of length Q the recurrence is evaluated
+as a masked attention-like product (MXU-friendly); across chunks a lax.scan
+carries the (B, H, P, N) state. The scan body is O(Q^2) on-chip -- the TPU
+analogue of the paper's block decomposition.
+
+Analog-CiM mapping (DESIGN.md SecArch-applicability): in_proj / out_proj are
+stationary-weight matmuls -> AnalogLinear. The SSD scan itself multiplies two
+*dynamic* tensors (state x input) and stays digital, as does the width-4
+depthwise conv1d -- which is exactly the paper's depthwise-is-CiM-hostile
+case (utilization would be 1/(4*channels)).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogCtx, linear_apply, linear_init
+from repro.models.common import ModelConfig, rmsnorm_apply, shard
+
+Array = jax.Array
+
+
+class SSMCache(NamedTuple):
+    conv: Array  # (B, W-1, conv_channels) rolling conv input window
+    h: Array  # (B, H, P, N) SSD state
+    # no length needed: the SSD state is position-free
+
+
+def ssm_init(key: Array, cfg: ModelConfig) -> dict:
+    m = cfg.d_model
+    d_in = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = d_in + 2 * n  # x, B, C streams
+    k_in, k_out, k_conv, k_a, k_dt = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": linear_init(k_in, m, proj_out),
+        "out_proj": linear_init(k_out, d_in, m),
+        "conv_w": jax.random.normal(k_conv, (cfg.conv_width, conv_ch), jnp.float32)
+        * (cfg.conv_width * conv_ch) ** -0.5,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(k_a, (h,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jax.random.uniform(k_dt, (h,), jnp.float32, minval=1e-3, maxval=0.1)
+            )
+            - 1.0
+        ),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, cache: Optional[Array]):
+    """Depthwise causal conv1d. x: (B, S, C), w: (W, C). Returns (y, new_tail)."""
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, C)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(width)
+    )
+    y = y + b.astype(x.dtype)
+    new_tail = xp[:, -(width - 1) :, :] if width > 1 else xp[:, :0, :]
+    return jax.nn.silu(y), new_tail
+
+
+def _ssd_chunked(
+    x: Array,  # (B, S, H, P) inputs (dt already folded in? no -- raw)
+    dt: Array,  # (B, S, H) softplus'd step sizes
+    a: Array,  # (H,) negative decay rates (A = -exp(A_log))
+    b_mat: Array,  # (B, S, N)
+    c_mat: Array,  # (B, S, N)
+    h0: Optional[Array],  # (B, H, P, N) or None
+    chunk: int,
+) -> tuple[Array, Array]:
+    """Chunked SSD scan. Returns (y, h_final)."""
+    bsz, s, nh, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    s_orig = s
+    if s % chunk:
+        # zero-pad: dt=0 => decay exp(0)=1 and zero input contribution, so
+        # padded steps leave the state untouched; padded outputs are sliced.
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    xs = x.reshape(bsz, nc, chunk, nh, p).swapaxes(0, 1)
+    dts = dt.reshape(bsz, nc, chunk, nh).swapaxes(0, 1)
+    bs = b_mat.reshape(bsz, nc, chunk, n).swapaxes(0, 1)
+    cs = c_mat.reshape(bsz, nc, chunk, n).swapaxes(0, 1)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, p, n), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(h, inp):
+        xc, dtc, bc, cc = inp  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        da = dtc * a  # (B,Q,H), negative
+        a_cum = jnp.cumsum(da, axis=1)  # inclusive
+        # intra-chunk: masked decay matrix L[t,s] = exp(A_cum[t]-A_cum[s])
+        l = jnp.exp(
+            jnp.clip(a_cum[:, :, None, :] - a_cum[:, None, :, :], -60.0, 0.0)
+        )  # (B,Q,Q,H)
+        l = jnp.where(tri[None, :, :, None], l, 0.0)
+        cb = jnp.einsum("bqn,bsn->bqs", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        xd = dtc[..., None] * xc.astype(jnp.float32)  # (B,Q,H,P)
+        y_intra = jnp.einsum("bqs,bqsh,bshp->bqhp", cb, l, xd)
+        # inter-chunk: contribution of the carried state
+        decay_in = jnp.exp(jnp.clip(a_cum, -60.0, 0.0))  # (B,Q,H)
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cc.astype(jnp.float32), h, decay_in)
+        # state update: S_c = sum_s exp(A_end - A_cum[s]) dt_s x_s B_s^T
+        decay_out = jnp.exp(
+            jnp.clip(a_cum[:, -1:, :] - a_cum, -60.0, 0.0)
+        )  # (B,Q,H)
+        s_c = jnp.einsum("bsh,bshp,bsn->bhpn", decay_out, xd, bs_f32(bc))
+        h_new = jnp.exp(jnp.clip(a_cum[:, -1, :], -60.0, 0.0))[..., None, None] * h + s_c
+        h_new = shard(h_new, "batch", "heads", None, None)
+        return h_new, (y_intra + y_inter)
+
+    def bs_f32(v):
+        return v.astype(jnp.float32)
+
+    h_final, ys = jax.lax.scan(step, h0, (xs, dts, bs, cs))
+    y = ys.swapaxes(0, 1).reshape(bsz, s, nh, p)[:, :s_orig]
+    return y.astype(x.dtype), h_final
+
+
+def ssm_apply(
+    params: dict,
+    x: Array,
+    ctx: AnalogCtx,
+    cfg: ModelConfig,
+    cache: Optional[SSMCache] = None,
+) -> tuple[Array, Optional[SSMCache]]:
+    """Mamba-2 block. x: (B, S, M) -> (B, S, M)."""
+    bsz, s, m = x.shape
+    d_in, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    proj = linear_apply(params["in_proj"], x, ctx)
+    z, xbc, dt_raw = jnp.split(proj, [d_in, 2 * d_in + 2 * n], axis=-1)
+
+    conv_cache = cache.conv if cache is not None else None
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_cache)
+    xs, b_mat, c_mat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(bsz, s, nh, p)
+    # The in_proj concat segments are not aligned to the TP shard boundary,
+    # so GSPMD cannot propagate a head sharding through the split -- without
+    # these constraints the O(Q^2 * H) SSD intermediates replicate over the
+    # model axis (measured 16x memory-term blowup on mamba2-2.7b).
+    xs = shard(xs, "batch", None, "heads", None)
+    z = shard(z, "batch", None, "ffn")
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    dt = shard(dt, "batch", None, "heads")
+    a = -jnp.exp(params["A_log"])  # (H,)
+
+    h0 = cache.h if cache is not None else None
+    if s == 1 and cache is not None:
+        # decode: exact single-step recurrence
+        da = jnp.exp(jnp.clip(dt[:, 0] * a, -60.0, 0.0))  # (B,H)
+        xd = dt[:, 0, :, None] * xs[:, 0].astype(jnp.float32)  # (B,H,P)
+        s_c = jnp.einsum("bhp,bn->bhpn", xd, b_mat[:, 0].astype(jnp.float32))
+        h_new = da[..., None, None] * h0 + s_c
+        y = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None].astype(x.dtype)  # (B,1,H,P)
+        h_final = h_new
+    else:
+        y, h_final = _ssd_chunked(xs, dt, a, b_mat, c_mat, h0, cfg.ssm_chunk)
+
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * xs
+    y = y.reshape(bsz, s, d_in)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_apply({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    out = linear_apply(params["out_proj"], y, ctx)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(conv=conv_tail.astype(cache.conv.dtype), h=h_final)
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        h=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    )

@@ -1,0 +1,4 @@
+"""Training substrate: pure-JAX optimizers + the paper's two-stage loop."""
+
+from repro.training.loop import TrainConfig, run_two_stage  # noqa: F401
+from repro.training.optim import OptimizerConfig, init, update  # noqa: F401

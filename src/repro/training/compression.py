@@ -1,0 +1,77 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantized all-reduce payloads: before the gradient reduction each
+leaf is scaled per block of 1024 values to int8; the quantization residual is
+carried in an error-feedback buffer and added back the next step (Karimireddy
+et al. 2019 -- EF-SGD keeps convergence unaffected to first order while
+cutting inter-pod gradient traffic 4x vs fp32 / 2x vs bf16).
+
+Usage inside a pjit'd train step:
+    g_q, scales, new_err = compress(grads, err)
+    # all-reduce g_q (int8) + scales (f32, 1/1024 of the volume)
+    grads = decompress(g_q, scales)
+
+On the multi-pod mesh this targets the pod axis (the slow inter-pod links):
+reduce-scatter within pods at full precision, int8 all-reduce across pods.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+def _pad_to_block(x):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def compress_leaf(g: jax.Array, err: jax.Array):
+    """Returns (int8 payload, f32 block scales, new error-feedback buffer)."""
+    g32 = g.astype(jnp.float32) + err
+    blocks, _ = _pad_to_block(g32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[: g32.size].reshape(g32.shape)
+    new_err = g32 - deq
+    return q, scale, new_err
+
+
+def decompress_leaf(q: jax.Array, scale: jax.Array, shape, dtype):
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return deq[:n].reshape(shape).astype(dtype)
+
+
+def init_error_state(grads_like: Any) -> Any:
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like
+    )
+
+
+def compress(grads: Any, err: Any):
+    # flatten/unflatten (param trees contain NamedTuples, so an
+    # is_leaf=tuple unzip would mis-fire)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    triples = [compress_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    q = treedef.unflatten([t[0] for t in triples])
+    scales = treedef.unflatten([t[1] for t in triples])
+    new_err = treedef.unflatten([t[2] for t in triples])
+    return q, scales, new_err
+
+
+def decompress(q: Any, scales: Any, grads_like: Any):
+    return jax.tree.map(
+        lambda qq, ss, g: decompress_leaf(qq, ss, g.shape, g.dtype),
+        q, scales, grads_like,
+    )

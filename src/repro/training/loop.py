@@ -1,0 +1,145 @@
+"""The production training loop: two-stage paper methodology + fault tolerance.
+
+Implements Sec. 4.2 / 6.1 end to end:
+  stage 1 -- FP training with weight clipping only; clip ranges recomputed
+             from std(W) every 10 steps;
+  stage 2 -- ranges frozen; noise injection (eta) + DAC/ADC quantizers with
+             trained ranges and the shared gain S enabled; LR restarts at
+             1/10; quantizer-range LR decays 1e-3 -> 1e-4; grad-clip 0.01
+             on S; stochastic quant-noise p=0.5.
+
+Fault tolerance: async atomic checkpoints + auto-resume + SIGTERM-triggered
+final save (preemption handling) + deterministic skip-ahead data. The loop is
+model-agnostic: it drives any (loss_fn, params) pair, so the LM family and
+the TinyML CNNs share it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.core.analog import AnalogConfig
+from repro.core.analog import refresh_clip_ranges
+from repro.training import optim as optim_lib
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    stage1_steps: int = 200
+    stage2_steps: int = 200
+    eta: float = 0.1
+    b_adc: int = 8
+    quant_noise_p: float = 0.5
+    lr: float = 3e-3
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    clip_refresh_every: int = 10  # stage-1 W_max refresh cadence (paper)
+    log_every: int = 25
+
+
+def run_two_stage(
+    loss_fn: Callable,  # (params, batch, analog_cfg, rng) -> (loss, metrics)
+    params: Any,
+    batches,  # iterator of batches
+    tcfg: TrainConfig,
+    *,
+    opt_kind: str = "adamw",
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+):
+    """Returns (params, history). Resumes from the latest checkpoint if any."""
+    preempted = {"flag": False}
+
+    def _sigterm(_sig, _frm):
+        preempted["flag"] = True
+
+    try:
+        signal.signal(signal.SIGTERM, _sigterm)
+    except ValueError:
+        pass  # not on the main thread (tests)
+
+    digital = AnalogConfig()
+    analog = AnalogConfig().train(
+        eta=tcfg.eta, b_adc=tcfg.b_adc, quant_noise_p=tcfg.quant_noise_p
+    )
+
+    def make_step(analog_cfg: AnalogConfig, opt_cfg: optim_lib.OptimizerConfig):
+        @jax.jit
+        def step(params, opt_state, batch, rng):
+            def f(p):
+                return loss_fn(p, batch, analog_cfg, rng)
+
+            (loss, metrics), grads = jax.value_and_grad(f, has_aux=True)(params)
+            params2, opt_state2, om = optim_lib.update(
+                opt_cfg, params, grads, opt_state
+            )
+            return params2, opt_state2, {**metrics, **om}
+
+        return step
+
+    history = []
+    rng = jax.random.PRNGKey(0)
+    start = 0
+    ckpt = None
+    if tcfg.ckpt_dir:
+        ckpt = store.AsyncCheckpointer(tcfg.ckpt_dir)
+        latest = store.latest_step(tcfg.ckpt_dir)
+        if latest is not None:
+            meta = store.read_meta(tcfg.ckpt_dir, latest)
+            params = store.restore(tcfg.ckpt_dir, latest, params)
+            start = meta["step"]
+
+    total = tcfg.stage1_steps + tcfg.stage2_steps
+
+    opt1 = optim_lib.OptimizerConfig(
+        kind=opt_kind, lr=tcfg.lr, total_steps=tcfg.stage1_steps,
+        warmup=max(1, min(20, tcfg.stage1_steps // 10)),
+    )
+    opt2 = optim_lib.OptimizerConfig(
+        kind=opt_kind, lr=tcfg.lr / 10.0, total_steps=tcfg.stage2_steps,
+        warmup=max(1, min(20, tcfg.stage2_steps // 10)),
+    )
+    step1 = make_step(digital, opt1)
+    step2 = make_step(analog, opt2)
+    opt_state = optim_lib.init(opt1, params)
+    stage = 1
+
+    it = iter(batches)
+    t0 = time.time()
+    for i in range(start, total):
+        if i == tcfg.stage1_steps:
+            # stage boundary: freeze clip ranges, reset optimizer, enable
+            # noise + quantizers (paper Sec. 4.2, two-stage protocol)
+            params = refresh_clip_ranges(params)
+            opt_state = optim_lib.init(opt2, params)
+            stage = 2
+        elif stage == 1 and i % tcfg.clip_refresh_every == 0:
+            params = refresh_clip_ranges(params)
+
+        batch = next(it)
+        batch = jax.tree.map(jnp.asarray, batch)
+        step_fn = step1 if stage == 1 else step2
+        params, opt_state, metrics = step_fn(
+            params, opt_state, batch, jax.random.fold_in(rng, i)
+        )
+        if i % tcfg.log_every == 0 or i == total - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m.update(step=i, stage=stage, wall_s=round(time.time() - t0, 1))
+            history.append(m)
+            if on_metrics:
+                on_metrics(i, m)
+        if ckpt and (i % tcfg.ckpt_every == 0 or preempted["flag"]):
+            ckpt.save(i + 1, params, {"stage": stage})
+        if preempted["flag"]:
+            break
+
+    if ckpt:
+        ckpt.save(total, params, {"stage": stage, "final": True})
+        ckpt.close()
+    return params, history

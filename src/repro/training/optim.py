@@ -1,0 +1,211 @@
+"""Pure-JAX optimizers: AdamW + Adafactor, with the paper's training protocol.
+
+Features the paper's methodology needs (Sec. 4.2 / 6.1):
+  * parameter groups by name: quantizer ranges (``r_adc``) get their own
+    exponentially-decaying LR (1e-3 -> 1e-4); the shared ADC gain ``gain_s``
+    gets a hard gradient clip at 0.01; ``*_buf`` buffers are frozen,
+  * two-stage schedule helper: stage 2 restarts cosine decay at LR/10,
+  * Adafactor (factored second moment) for the >=72B configs where AdamW's
+    optimizer state alone would exceed HBM (DESIGN.md Sec. 5).
+
+State layout mirrors the param tree; every state leaf inherits the param's
+sharding under pjit (ZeRO-style: optimizer state is as sharded as the
+weights).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        return base_lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+
+    return lr
+
+
+def exp_schedule(lr0: float, lr1: float, total_steps: int):
+    """Exponential decay lr0 -> lr1 (the paper's quantizer-range LR)."""
+
+    def lr(step):
+        frac = jnp.clip(jnp.asarray(step, jnp.float32) / max(total_steps, 1), 0, 1)
+        return lr0 * (lr1 / lr0) ** frac
+
+    return lr
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def classify_param(path) -> str:
+    """'frozen' | 'range' (r_adc) | 'gain' (S) | 'weight'."""
+    name = _path_name(path)
+    leaf = name.rsplit("/", 1)[-1]
+    if leaf.endswith("_buf"):
+        return "frozen"
+    if leaf == "r_adc":
+        return "range"
+    if leaf == "gain_s":
+        return "gain"
+    return "weight"
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    total_steps: int = 10_000
+    warmup: int = 100
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip_norm: float = 1.0
+    # paper-specific groups
+    range_lr0: float = 1e-3
+    range_lr1: float = 1e-4
+    gain_grad_clip: float = 0.01
+    # adafactor
+    factored_min_dim: int = 128
+
+
+class OptState(NamedTuple):
+    step: Array
+    m: Any  # first moment (adamw) or None-tree (adafactor)
+    v: Any  # second moment / factored rows
+    v_col: Any  # factored cols (adafactor) or None-tree
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def init(cfg: OptimizerConfig, params) -> OptState:
+    if cfg.kind == "adamw":
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            m=_zeros_like_tree(params),
+            v=_zeros_like_tree(params),
+            v_col=jax.tree.map(lambda _: jnp.zeros((), jnp.float32), params),
+        )
+    if cfg.kind == "adafactor":
+
+        def row_state(p):
+            if p.ndim >= 2 and min(p.shape[-2:]) >= cfg.factored_min_dim:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, dtype=jnp.float32)
+
+        def col_state(p):
+            if p.ndim >= 2 and min(p.shape[-2:]) >= cfg.factored_min_dim:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(lambda _: jnp.zeros((), jnp.float32), params),
+            v=jax.tree.map(row_state, params),
+            v_col=jax.tree.map(col_state, params),
+        )
+    raise ValueError(cfg.kind)
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def update(
+    cfg: OptimizerConfig,
+    params,
+    grads,
+    state: OptState,
+) -> tuple[Any, OptState, dict]:
+    """One optimizer step with the paper's parameter groups."""
+    step = state.step + 1
+    lr_w = cosine_schedule(cfg.lr, cfg.total_steps, cfg.warmup)(step)
+    lr_r = exp_schedule(cfg.range_lr0, cfg.range_lr1, cfg.total_steps)(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    flat_pg, treedef = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat_pg]
+    kinds = [classify_param(p) for p in paths]
+    flat_p = [x for _, x in flat_pg]
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_vc = jax.tree.leaves(state.v_col)
+
+    def one(kind, p, g, m, v, vc):
+        if kind == "frozen":
+            return p, m, v, vc
+        g = g.astype(jnp.float32)
+        if kind == "gain":
+            g = jnp.clip(g, -cfg.gain_grad_clip, cfg.gain_grad_clip)
+        lr = lr_r if kind == "range" else lr_w
+        p32 = p.astype(jnp.float32)
+        if cfg.kind == "adamw":
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mh = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+            vh = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+            upd = mh / (jnp.sqrt(vh) + cfg.eps)
+            if kind == "weight":
+                upd = upd + cfg.weight_decay * p32
+            p32 = p32 - lr * upd
+            return p32.astype(p.dtype), m, v, vc
+        # adafactor
+        factored = g.ndim >= 2 and min(g.shape[-2:]) >= cfg.factored_min_dim
+        decay = 1.0 - step.astype(jnp.float32) ** -0.8
+        if factored:
+            v = decay * v + (1 - decay) * jnp.mean(g * g, axis=-1)
+            vc = decay * vc + (1 - decay) * jnp.mean(g * g, axis=-2)
+            r = v / jnp.maximum(jnp.mean(v, axis=-1, keepdims=True), 1e-30)
+            denom = jnp.sqrt(r[..., None] * vc[..., None, :] + cfg.eps)
+        else:
+            v = decay * v + (1 - decay) * g * g
+            denom = jnp.sqrt(v + cfg.eps)
+        upd = g / denom
+        # update clipping (Adafactor's RMS-1 rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+        upd = upd / jnp.maximum(1.0, rms)
+        if kind == "weight":
+            upd = upd + cfg.weight_decay * p32
+        p32 = p32 - lr * upd
+        return p32.astype(p.dtype), m, v, vc
+
+    results = [
+        one(k, p, g, m, v, vc)
+        for k, p, g, m, v, vc in zip(
+            kinds, flat_p, flat_g, flat_m, flat_v, flat_vc
+        )
+    ]
+    unflatten = treedef.unflatten
+    new_params = unflatten([r[0] for r in results])
+    new_m = unflatten([r[1] for r in results])
+    new_v = unflatten([r[2] for r in results])
+    new_vc = unflatten([r[3] for r in results])
+    metrics = {"grad_norm": gnorm, "lr": lr_w}
+    return new_params, OptState(step, new_m, new_v, new_vc), metrics

@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# strictly for the dry-run); keep XLA quiet and single-threaded.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,122 @@
+"""AnalogLinear / analog_matmul invariants across the three execution modes."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import AnalogConfig, AnalogCtx, analog_matmul, linear_apply, linear_init
+from repro.core.analog import refresh_clip_ranges
+
+
+def _layer(d_in=512, d_out=64, seed=0):
+    return refresh_clip_ranges(linear_init(jax.random.PRNGKey(seed), d_in, d_out))
+
+
+def test_digital_mode_is_plain_matmul():
+    p = _layer()
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 512))
+    ctx = AnalogCtx(cfg=AnalogConfig(), gain_s=jnp.float32(1.0))
+    y = linear_apply(p, x, ctx)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ p["w"]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_analog_train_zero_noise_is_pure_quantization():
+    p = _layer()
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 512))
+    cfg = AnalogConfig().train(eta=0.0, b_adc=8)
+    y1 = linear_apply(p, x, AnalogCtx(cfg=cfg, gain_s=jnp.float32(1.0), key=None))
+    y2 = linear_apply(p, x, AnalogCtx(cfg=cfg, gain_s=jnp.float32(1.0), key=None))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_noise_draw_changes_with_key_and_layer_counter():
+    p = _layer()
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 512))
+    cfg = AnalogConfig().train(eta=0.1, b_adc=8)
+    key = jax.random.PRNGKey(3)
+    y1 = linear_apply(p, x, AnalogCtx(cfg=cfg, gain_s=jnp.float32(1.0), key=key))
+    y2 = linear_apply(p, x, AnalogCtx(cfg=cfg, gain_s=jnp.float32(1.0), key=key))
+    # fresh ctx restarts the layer counter -> same draw
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    ctx = AnalogCtx(cfg=cfg, gain_s=jnp.float32(1.0), key=key)
+    ya = linear_apply(p, x, ctx)
+    yb = linear_apply(p, x, ctx)  # counter advanced -> different draw
+    assert not np.array_equal(np.asarray(ya), np.asarray(yb))
+
+
+def test_pcm_infer_error_grows_with_time():
+    p = _layer()
+    # widen the ADC range so it does not clip: with the untrained r_adc=1 the
+    # error is NON-monotone in time (drift shrinks outputs INTO the clipping
+    # range first -- exactly the interplay the paper trains ranges to avoid)
+    p = dict(p, r_adc=jnp.float32(6.0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 512))
+    ctx0 = AnalogCtx(cfg=AnalogConfig(), gain_s=jnp.float32(1.0))
+    y0 = linear_apply(p, x, ctx0)
+    errs = []
+    for t in (3600.0, 30 * 86400.0, 365 * 86400.0):
+        cfg = AnalogConfig().infer(b_adc=8, t_seconds=t)
+        ys = []
+        for d in range(3):
+            ctx = AnalogCtx(cfg=cfg, gain_s=jnp.float32(1.0),
+                            key=jax.random.PRNGKey(100 + d))
+            y = linear_apply(p, x, ctx)
+            ys.append(float(jnp.linalg.norm(y - y0) / jnp.linalg.norm(y0)))
+        errs.append(np.mean(ys))
+    assert errs[0] < errs[2], errs  # drift degrades computation over time
+
+
+def test_gradients_reach_all_trainables():
+    p = _layer()
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 512))
+    cfg = AnalogConfig().train(eta=0.05, b_adc=8)
+
+    def loss(p, s):
+        ctx = AnalogCtx(cfg=cfg, gain_s=s, key=jax.random.PRNGKey(0))
+        return jnp.sum(linear_apply(p, x, ctx) ** 2)
+
+    g, gs = jax.grad(loss, argnums=(0, 1))(p, jnp.float32(1.0))
+    assert float(jnp.abs(g["w"]).sum()) > 0
+    assert float(jnp.abs(g["r_adc"])) > 0
+    assert float(jnp.abs(gs)) > 0  # the shared gain S is differentiable
+    # buffers receive zero cotangent relevance (they are constants in-graph)
+
+
+@given(
+    eta=st.sampled_from([0.0, 0.05, 0.2]),
+    b_adc=st.sampled_from([4, 6, 8]),
+    per_tile=st.booleans(),
+)
+@settings(max_examples=12, deadline=None)
+def test_analog_output_bounded_by_adc_range_per_tile(eta, b_adc, per_tile):
+    """Invariant: each row-tile's ADC output is within +-r_adc, so the full
+    output is bounded by n_tiles * r_adc (digital accumulation)."""
+    d_in = 2048  # 2 tiles
+    p = _layer(d_in=d_in, d_out=32, seed=4)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, d_in)) * 10
+    cfg = AnalogConfig().train(eta=eta, b_adc=b_adc, per_tile_adc=per_tile)
+    ctx = AnalogCtx(cfg=cfg, gain_s=jnp.float32(1.0), key=jax.random.PRNGKey(0))
+    y = analog_matmul(
+        x, p["w"], r_adc=p["r_adc"],
+        w_min=p["w_clip_buf"][0], w_max=p["w_clip_buf"][1], ctx=ctx,
+    )
+    n_tiles = d_in // 1024 if per_tile else 1
+    r = abs(float(p["r_adc"]))
+    assert float(jnp.max(jnp.abs(y))) <= n_tiles * r * (1 + 1e-5)
+
+
+def test_refresh_clip_ranges_stacked():
+    """Scanned (stacked) layers get per-layer clip ranges."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 64, 32))
+    w = w * jnp.array([0.01, 0.1, 1.0])[:, None, None]
+    tree = {"w": w, "w_clip_buf": jnp.tile(jnp.array([-1.0, 1.0]), (3, 1)),
+            "r_adc": jnp.ones((3,))}
+    out = refresh_clip_ranges(tree)
+    his = np.asarray(out["w_clip_buf"])[:, 1]
+    assert his[0] < his[1] < his[2]
+    assert his[2] == pytest.approx(2.0, rel=0.1)

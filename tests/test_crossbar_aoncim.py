@@ -1,0 +1,152 @@
+"""Crossbar mapping (im2col, densify, tiler) + AON-CiM perf model."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import aoncim, crossbar
+from repro.core.crossbar import LayerShape, map_layers
+from repro.models import (
+    analognet_kws_config,
+    analognet_vww_config,
+    layer_shapes,
+    micronet_kws_s_config,
+    micronet_layer_shapes,
+)
+
+
+def test_im2col_matches_conv():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 9, 7, 5))
+    w = jax.random.normal(key, (3, 3, 5, 11)) * 0.1
+    patches = crossbar.im2col(x, 3, 3, 1, "SAME")
+    y_mat = patches @ crossbar.conv_weight_as_matrix(w)
+    y_conv = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(np.asarray(y_mat), np.asarray(y_conv), rtol=2e-5, atol=2e-5)
+
+
+def test_depthwise_densify_equivalence_and_utilization():
+    key = jax.random.PRNGKey(1)
+    c = 6
+    x = jax.random.normal(key, (2, 8, 8, c))
+    w = jax.random.normal(key, (3, 3, c, 1)) * 0.2
+    dense = crossbar.depthwise_densify(w)
+    assert dense.shape == (9 * c, c)
+    # utilization of the dense block is exactly 1/C (Fig. 3)
+    nnz = float((np.asarray(dense) != 0).mean())
+    assert nnz == pytest.approx(1.0 / c, rel=1e-6)
+    y_mat = crossbar.im2col(x, 3, 3, 1, "SAME") @ dense
+    y_dw = jax.lax.conv_general_dilated(
+        x, jnp.transpose(w, (0, 1, 3, 2)), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=c,
+    )
+    np.testing.assert_allclose(np.asarray(y_mat), np.asarray(y_dw), rtol=2e-5, atol=2e-5)
+
+
+@given(
+    layers=st.lists(
+        st.tuples(st.integers(1, 2500), st.integers(1, 700), st.integers(1, 50)),
+        min_size=1,
+        max_size=12,
+    )
+)
+@settings(max_examples=30, deadline=None)
+def test_packer_invariants(layers):
+    shapes = [
+        LayerShape(f"l{i}", r, c, p) for i, (r, c, p) in enumerate(layers)
+    ]
+    m = map_layers(shapes, 1024, 512)
+    # every split block placed exactly once
+    n_blocks = sum(
+        len(crossbar.split_layer(s, 1024, 512)) for s in shapes
+    )
+    assert len(m.placements) == n_blocks
+    # placements stay on the array
+    for p in m.placements:
+        assert 0 <= p.row0 and p.row0 + p.rows <= 1024
+        assert 0 <= p.col0 and p.col0 + p.cols <= 512
+    # cells accounting
+    assert m.cells_used == sum(
+        min(1024, s.rows - rt * 1024) * c
+        for s in shapes
+        for rt, _r, c in [
+            (b[0], b[1], b[2]) for b in crossbar.split_layer(s, 1024, 512)
+        ]
+    )
+    assert 0 < m.utilization <= 1.0
+
+
+def test_no_overlap_single_array():
+    shapes = layer_shapes(analognet_kws_config())
+    m = map_layers(shapes)
+    assert m.n_arrays == 1
+    grid = crossbar.occupancy_grid(m)
+    assert grid.max() == 1  # no overlapping placements
+
+
+def test_paper_mappings():
+    """Fig. 6: both AnalogNets fit ONE 1024x512 array at the paper's
+    utilizations (57.3% / 67.5%; our reconstructions: ~58% / ~66%)."""
+    kws = map_layers(layer_shapes(analognet_kws_config()))
+    vww = map_layers(layer_shapes(analognet_vww_config()))
+    assert kws.n_arrays == 1 and vww.n_arrays == 1
+    assert kws.utilization == pytest.approx(0.573, abs=0.03)
+    assert vww.utilization == pytest.approx(0.675, abs=0.03)
+
+
+def test_micronet_depthwise_utilization_trend():
+    """Table 3: utilization improves as the crossbar shrinks (9->40->66%)."""
+    cfg = micronet_kws_s_config()
+    utils = []
+    for r, c in [(1024, 512), (128, 128), (64, 64)]:
+        m = map_layers(micronet_layer_shapes(cfg, r, c), r, c)
+        utils.append(m.utilization)
+    assert utils[0] < 0.15  # dense-form depthwise wastes the big array
+    assert utils[0] < utils[1] < utils[2]
+    assert utils[2] > 0.5
+
+
+def test_aoncim_peak_numbers_match_table2():
+    for bits, tops, topsw in [(8, 2.02, 13.55), (6, 7.71, 45.55), (4, 26.21, 112.44)]:
+        assert aoncim.peak_tops(bits) == pytest.approx(tops, rel=0.01)
+        assert aoncim.PEAK_TOPS_PER_W[bits] == topsw
+
+
+def test_layer_serial_latency_scales_with_patches_and_cols():
+    a = aoncim.layer_perf(LayerShape("a", 512, 128, 100), 8)
+    b = aoncim.layer_perf(LayerShape("b", 512, 128, 200), 8)
+    c = aoncim.layer_perf(LayerShape("c", 512, 256, 100), 8)
+    assert b.latency_s == pytest.approx(2 * a.latency_s)
+    assert c.phases_per_mvm == 2 * a.phases_per_mvm
+
+
+def test_tall_layers_more_efficient():
+    """Fig. 8: same MACs, taller aspect ratio -> higher TOPS/W (fewer ADCs)."""
+    tall = aoncim.layer_perf(LayerShape("tall", 1024, 64, 100), 8)
+    wide = aoncim.layer_perf(LayerShape("wide", 64, 512, 200), 8)
+    assert tall.tops_per_w > wide.tops_per_w
+
+
+def test_calibration_is_physical():
+    split = aoncim.calibrate(
+        layer_shapes(analognet_kws_config()),
+        layer_shapes(analognet_vww_config()),
+        bits=8,
+    )
+    assert 0 < split.adc_frac < 1
+    assert 0 <= split.row_frac < 1
+    assert split.dig_frac >= 0
+    # ADCs dominate (paper Sec. 5.2)
+    assert split.adc_frac > split.row_frac
+
+
+def test_faster_cycles_at_low_bits():
+    m8 = aoncim.model_perf(layer_shapes(analognet_kws_config()), 8)
+    m4 = aoncim.model_perf(layer_shapes(analognet_kws_config()), 4)
+    assert m4.latency_s < m8.latency_s / 10  # 130ns -> 10ns
+    assert m4.tops_per_w > m8.tops_per_w

@@ -1,0 +1,135 @@
+"""Pallas analog-MVM kernel vs the pure-jnp oracle (interpret mode).
+
+Tolerance model: quantized outputs may differ by at most ONE quantization
+step on a tiny fraction of elements (round-to-nearest ties flipped by fp32
+accumulation-order differences); everything else must match exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import analog_mvm
+from repro.kernels.ref import analog_mvm_ref
+
+SHAPES = [
+    (8, 1024, 512),  # exactly one crossbar tile
+    (16, 2048, 512),  # two row tiles
+    (4, 4096, 256),  # four row tiles, narrow out
+    (7, 1000, 130),  # ragged everything (padding path)
+    (1, 512, 64),  # single row tile, tiny
+]
+
+
+def _make(m, k, n, dtype, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
+    w = (jax.random.normal(kw, (k, n), jnp.float32) * k**-0.5).astype(dtype)
+    return x, w
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits", [8, 6, 4])
+def test_kernel_matches_oracle(m, k, n, dtype, bits):
+    x, w = _make(m, k, n, dtype)
+    rd, ra = jnp.float32(4.0), jnp.float32(2.0)
+    y_k = analog_mvm(x, w, r_adc=ra, r_dac=rd, bits=bits, interpret=True)
+    y_r = analog_mvm_ref(x, w, rd, ra, b_dac=bits + 1, b_adc=bits)
+    step = 2.0 / (2 ** (bits - 1) - 1)
+    n_tiles = -(-k // 1024)
+    d = np.abs(np.asarray(y_k, np.float32) - np.asarray(y_r, np.float32))
+    tol = step * (1.01 if dtype == jnp.float32 else 2.0) * n_tiles
+    assert d.max() <= tol, (d.max(), step)
+    frac = (d > step * 0.5).mean()
+    assert frac < (0.01 if dtype == jnp.float32 else 0.15)
+
+
+@pytest.mark.parametrize("per_tile", [True, False])
+def test_per_tile_flag(per_tile):
+    x, w = _make(8, 2048, 256, jnp.float32)
+    rd, ra = jnp.float32(4.0), jnp.float32(1.0)
+    y_k = analog_mvm(
+        x, w, r_adc=ra, r_dac=rd, bits=8, per_tile_adc=per_tile, interpret=True
+    )
+    y_r = analog_mvm_ref(x, w, rd, ra, per_tile_adc=per_tile)
+    step = 1.0 / 127
+    assert np.abs(np.asarray(y_k) - np.asarray(y_r)).max() <= 2.01 * step
+
+
+def test_per_tile_quantization_differs_from_ideal():
+    """Per-row-tile ADC conversion is a REAL effect: K > 1024 must differ
+    from single-ADC quantization (the partial sums clip/round separately)."""
+    x, w = _make(16, 4096, 128, jnp.float32, seed=3)
+    rd, ra = jnp.float32(4.0), jnp.float32(0.5)
+    y_tile = analog_mvm_ref(x, w, rd, ra, per_tile_adc=True)
+    y_ideal = analog_mvm_ref(x, w, rd, ra, per_tile_adc=False)
+    assert float(jnp.max(jnp.abs(y_tile - y_ideal))) > 0
+
+
+def test_dac_skip_path():
+    x, w = _make(8, 1024, 128, jnp.float32)
+    ra = jnp.float32(2.0)
+    y_k = analog_mvm(x, w, r_adc=ra, r_dac=None, bits=8, interpret=True)
+    y_r = analog_mvm_ref(
+        x, w, jnp.float32(1.0), ra, apply_dac=False
+    )
+    assert np.abs(np.asarray(y_k) - np.asarray(y_r)).max() <= 2.0 / 127
+
+
+def test_kernel_gradients_match_reference_vjp():
+    x, w = _make(8, 2048, 128, jnp.float32)
+    rd, ra = jnp.float32(4.0), jnp.float32(2.0)
+    g = jax.random.normal(jax.random.PRNGKey(5), (8, 128))
+
+    def k_fn(x, w, rd, ra):
+        return jnp.vdot(analog_mvm(x, w, r_adc=ra, r_dac=rd, bits=8, interpret=True), g)
+
+    def r_fn(x, w, rd, ra):
+        return jnp.vdot(analog_mvm_ref(x, w, rd, ra), g)
+
+    gk = jax.grad(k_fn, argnums=(0, 1, 2, 3))(x, w, rd, ra)
+    gr = jax.grad(r_fn, argnums=(0, 1, 2, 3))(x, w, rd, ra)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_batched_leading_dims():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 1024))
+    w = jax.random.normal(jax.random.PRNGKey(1), (1024, 64)) * 0.03
+    y = analog_mvm(x, w, r_adc=jnp.float32(2.0), r_dac=jnp.float32(4.0), interpret=True)
+    assert y.shape == (2, 3, 64)
+
+
+# ----------------------------------------------------------------------------
+# flash attention kernel
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("bh,s,d", [(4, 256, 64), (2, 512, 128)])
+def test_flash_attention_matches_reference(causal, bh, s, d):
+    from repro.kernels.flash_attention import flash_attention_fwd
+
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (bh, s, d), jnp.float32)
+    k = jax.random.normal(kk, (bh, s, d), jnp.float32)
+    v = jax.random.normal(kv, (bh, s, d), jnp.float32)
+    o = flash_attention_fwd(q, k, v, causal=causal, block_q=128,
+                            block_k=128, interpret=True)
+    sref = jnp.einsum("bqd,bkd->bqk", q, k) * d**-0.5
+    if causal:
+        sref = jnp.where(jnp.tril(jnp.ones((s, s), bool)), sref, -1e30)
+    oref = jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(sref, -1), v)
+    assert float(jnp.max(jnp.abs(o - oref))) < 1e-4
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention import flash_attention_fwd
+
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (2, 256, 64), jnp.bfloat16)
+    o = flash_attention_fwd(q, q, q, block_q=128, block_k=128, interpret=True)
+    assert o.dtype == jnp.bfloat16 and bool(jnp.isfinite(o.astype(jnp.float32)).all())

@@ -1,0 +1,134 @@
+"""Noise-injection (Eq. 1-2) and the calibrated PCM statistical model."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import noise, pcm
+
+
+# ---------------------------------------------------------------- noise ----
+
+
+def test_clip_ste_passes_gradient_outside_range():
+    w = jnp.array([-3.0, -0.5, 0.5, 3.0])
+    g = jax.grad(lambda w_: jnp.sum(noise.clip_ste(w_, -1.0, 1.0) ** 2))(w)
+    # STE: gradient computed at clipped values but flows to all entries
+    assert np.all(np.abs(np.asarray(g)) > 0)
+    clipped = np.asarray(noise.clip_ste(w, -1.0, 1.0))
+    assert clipped.max() <= 1.0 and clipped.min() >= -1.0
+
+
+def test_noise_sigma_matches_eq1():
+    key = jax.random.PRNGKey(0)
+    w = jnp.zeros((200_000,))
+    eta, w_max = 0.1, 0.5
+    dw = np.asarray(noise.sample_weight_noise(key, w, eta, jnp.float32(w_max)))
+    assert dw.std() == pytest.approx(eta * w_max, rel=0.02)
+    assert abs(dw.mean()) < 3 * eta * w_max / np.sqrt(dw.size)
+
+
+def test_noise_is_deterministic_per_key():
+    key = jax.random.PRNGKey(7)
+    w = jnp.ones((64,))
+    a = noise.sample_weight_noise(key, w, 0.1, jnp.float32(1.0))
+    b = noise.sample_weight_noise(key, w, 0.1, jnp.float32(1.0))
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_layer_noise_key_unique_per_layer_and_step():
+    base = jax.random.PRNGKey(0)
+    keys = {
+        tuple(np.asarray(noise.layer_noise_key(base, l, s)))
+        for l in range(4)
+        for s in range(4)
+    }
+    assert len(keys) == 16
+
+
+def test_clip_ranges_from_std():
+    w = jax.random.normal(jax.random.PRNGKey(0), (10_000,)) * 0.02
+    lo, hi = noise.clip_ranges_from_std(w)
+    assert float(hi) == pytest.approx(2 * 0.02, rel=0.05)
+    assert float(lo) == pytest.approx(-float(hi))
+
+
+# ------------------------------------------------------------------ pcm ----
+
+
+def test_conductance_split_reconstructs_weights():
+    w = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 0.05
+    gp, gn, scale = pcm.weights_to_conductances(w)
+    assert np.all(np.asarray(gp) >= 0) and np.all(np.asarray(gn) >= 0)
+    # differential pair reconstructs exactly
+    assert np.allclose(np.asarray((gp - gn) * scale), np.asarray(w), atol=1e-7)
+    assert float(jnp.max(jnp.maximum(gp, gn))) <= 1.0 + 1e-6
+
+
+def test_programming_noise_polynomial():
+    g = jnp.array([0.0, 0.5, 1.0])
+    sig = np.asarray(pcm.programming_noise_sigma(g)) * pcm.G_MAX_US
+    expect = np.maximum(-1.1731 * np.asarray(g) ** 2 + 1.9650 * np.asarray(g) + 0.2635, 0)
+    assert np.allclose(sig, expect, rtol=1e-6)
+
+
+def test_drift_decays_with_time():
+    key = jax.random.PRNGKey(0)
+    g = jnp.full((50_000,), 0.8)
+    cfg = pcm.PCMConfig()
+    g_1h = np.asarray(pcm.drift(key, g, jnp.float32(3600.0), cfg)).mean()
+    g_1y = np.asarray(pcm.drift(key, g, jnp.float32(365 * 86400.0), cfg)).mean()
+    assert g_1y < g_1h < 0.8
+    # at t = t_c there is no drift
+    g_tc = np.asarray(pcm.drift(key, g, jnp.float32(pcm.T_C), cfg))
+    assert np.allclose(g_tc, 0.8, atol=1e-6)
+
+
+def test_drift_exponent_recoverable():
+    """Fitting the drift law on simulated data recovers nu_mean."""
+    key = jax.random.PRNGKey(1)
+    cfg = pcm.PCMConfig(drift_nu_std=0.0)  # deterministic exponent
+    g = jnp.full((1000,), 0.5)
+    ts = [1e2, 1e4, 1e6]
+    means = [float(np.mean(np.asarray(pcm.drift(key, g, jnp.float32(t), cfg)))) for t in ts]
+    slopes = np.polyfit(np.log(np.asarray(ts) / pcm.T_C), np.log(means), 1)
+    assert slopes[0] == pytest.approx(-cfg.drift_nu_mean, rel=0.02)
+
+
+def test_read_noise_grows_with_time_and_small_g():
+    g_t = jnp.array([0.9, 0.1])
+    g_d = g_t
+    s_early = np.asarray(pcm.read_noise_sigma(g_d, g_t, jnp.float32(1.0)))
+    s_late = np.asarray(pcm.read_noise_sigma(g_d, g_t, jnp.float32(86400.0)))
+    assert np.all(s_late > s_early)
+    # relative noise is worse for small conductances (Q capped at 0.2)
+    rel = s_late / np.asarray(g_d)
+    assert rel[1] > rel[0]
+
+
+def test_gdc_compensates_global_drift():
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (2048,)) * 0.05
+    t = 30 * 86400.0
+    w_gdc, scale = pcm.simulate_weights(key, w, t, pcm.PCMConfig(read_noise=False))
+    w_raw, _ = pcm.simulate_weights(
+        key, w, t, pcm.PCMConfig(read_noise=False, gdc=False)
+    )
+    # applying the GDC scalar must shrink the systematic magnitude error
+    err_gdc = abs(float(jnp.mean(jnp.abs(w_raw) * scale)) - float(jnp.mean(jnp.abs(w))))
+    err_raw = abs(float(jnp.mean(jnp.abs(w_raw))) - float(jnp.mean(jnp.abs(w))))
+    assert scale > 1.0  # drift shrinks conductances, GDC scales back up
+    assert err_gdc < err_raw
+
+
+@given(t=st.sampled_from([25.0, 3600.0, 86400.0, 365 * 86400.0]))
+@settings(max_examples=4, deadline=None)
+def test_simulated_weight_error_grows_with_time(t):
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (4096,)) * 0.05
+    w_eff, scale = pcm.simulate_weights(key, w, t)
+    rel = float(jnp.linalg.norm(w_eff * scale - w) / jnp.linalg.norm(w))
+    assert 0.0 < rel < 1.0  # noisy but not garbage

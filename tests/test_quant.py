@@ -1,0 +1,87 @@
+"""Property tests for the DAC/ADC quantizers and the shared-gain constraint."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import quant
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+@given(
+    bits=st.integers(2, 9),
+    r=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_levels_and_range(bits, r, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * r * 2
+    y = np.asarray(quant.fake_quant(x, jnp.float32(r), bits))
+    n = 2 ** (bits - 1) - 1
+    step = r / n
+    # outputs lie on the quantization grid and within the range
+    assert np.all(np.abs(y) <= r + 1e-5 * r)
+    ratio = y / step
+    assert np.allclose(ratio, np.round(ratio), atol=1e-3)
+    # at most 2^bits - 1 distinct levels
+    assert len(np.unique(np.round(ratio))) <= 2 * n + 1
+
+
+@given(bits=st.integers(2, 9), seed=st.integers(0, 2**31 - 1))
+def test_fake_quant_monotone(bits, seed):
+    x = jnp.sort(jax.random.normal(jax.random.PRNGKey(seed), (64,)))
+    y = np.asarray(quant.fake_quant(x, jnp.float32(1.0), bits))
+    assert np.all(np.diff(y) >= -1e-6)
+
+
+def test_round_ste_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(quant.round_ste(x)))(jnp.linspace(-2, 2, 11))
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+def test_fake_quant_gradients_flow_to_range():
+    x = jnp.linspace(-3, 3, 31)
+    gr = jax.grad(lambda r: jnp.sum(quant.fake_quant(x, r, 8) ** 2))(
+        jnp.float32(1.0)
+    )
+    assert np.isfinite(float(gr)) and abs(float(gr)) > 0
+
+
+def test_dac_range_constraint_eq5():
+    """S == r_DAC * W_max / r_ADC must hold identically (Eq. 5)."""
+    r_adc = jnp.float32(1.7)
+    s = jnp.float32(-2.3)  # negative S exercises the |S| subgradient path
+    w_max = jnp.float32(0.05)
+    r_dac = quant.dac_range(r_adc, s, w_max)
+    assert np.isclose(float(r_dac * w_max / jnp.abs(r_adc)), abs(float(s)), rtol=1e-5)
+
+
+def test_dac_is_one_bit_finer():
+    spec = quant.QuantSpec(b_adc=6)
+    assert spec.b_dac == 7
+
+
+def test_quant_noise_masking():
+    key = jax.random.PRNGKey(0)
+    x = jnp.ones((10_000,))
+    xq = jnp.zeros((10_000,))
+    y = np.asarray(quant.quant_noise(x, xq, key, 0.5))
+    frac_quantized = float((y == 0).mean())
+    assert 0.45 < frac_quantized < 0.55
+    # p=1 -> deterministic quantization
+    y1 = np.asarray(quant.quant_noise(x, xq, key, 1.0))
+    assert np.all(y1 == 0)
+
+
+def test_gain_gradient_clip():
+    g = quant.clip_s_gradient(jnp.float32(0.5))
+    assert float(g) == pytest.approx(0.01)
+    g = quant.clip_s_gradient(jnp.float32(-0.5))
+    assert float(g) == pytest.approx(-0.01)

@@ -1,0 +1,186 @@
+"""Substrate tests: checkpoint store, data pipeline, optimizer, compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.data.pipeline import PipelineConfig, batch_at
+from repro.training import compression, optim
+
+
+# ------------------------------------------------------------ checkpoint ---
+
+
+def _tree():
+    return {
+        "a": {"w": jnp.arange(12.0).reshape(3, 4), "r_adc": jnp.float32(1.5)},
+        "b": jnp.ones((5,), jnp.int32),
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    store.save(str(tmp_path), 7, t)
+    assert store.latest_step(str(tmp_path)) == 7
+    r = store.restore(str(tmp_path), 7, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_commit_marker(tmp_path):
+    t = _tree()
+    path = store.save(str(tmp_path), 3, t)
+    os.remove(os.path.join(path, "COMMIT"))
+    assert store.latest_step(str(tmp_path)) is None  # uncommitted is invisible
+
+
+def test_checkpoint_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        store.save(str(tmp_path), s, t)
+    store.gc_old(str(tmp_path), keep=2)
+    assert store.latest_step(str(tmp_path)) == 5
+    assert not os.path.exists(os.path.join(str(tmp_path), "step_00000001"))
+    assert os.path.exists(os.path.join(str(tmp_path), "step_00000004"))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    store.save(str(tmp_path), 1, _tree())
+    bad = {"a": {"w": jnp.zeros((4, 4)), "r_adc": jnp.float32(0)},
+           "b": jnp.zeros((5,), jnp.int32)}
+    with pytest.raises(ValueError, match="mismatch"):
+        store.restore(str(tmp_path), 1, bad)
+
+
+def test_async_checkpointer(tmp_path):
+    ck = store.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        ck.save(s, _tree(), {"stage": 1})
+    ck.close()
+    assert store.latest_step(str(tmp_path)) == 30
+    assert store.read_meta(str(tmp_path), 30)["stage"] == 1
+
+
+def test_elastic_restore_replacement_sharding(tmp_path):
+    """Restore re-places arrays with new shardings (single-device here, but
+    exercises the device_put path used for cross-topology restarts)."""
+    t = _tree()
+    store.save(str(tmp_path), 1, t)
+    sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    shardings = jax.tree.map(lambda _: sharding, t)
+    r = store.restore(str(tmp_path), 1, t, shardings=shardings)
+    assert jax.tree.leaves(r)[0].sharding == sharding
+
+
+# ------------------------------------------------------------------ data ---
+
+
+def test_data_deterministic_and_skip_ahead():
+    cfg = PipelineConfig(kind="lm", global_batch=8, seq_len=16, vocab=97)
+    b1 = batch_at(cfg, 5)
+    b2 = batch_at(cfg, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = batch_at(cfg, 6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_data_host_disjoint():
+    kw = dict(kind="lm", global_batch=8, seq_len=16, vocab=97, host_count=2)
+    h0 = batch_at(PipelineConfig(host_index=0, **kw), 3)
+    h1 = batch_at(PipelineConfig(host_index=1, **kw), 3)
+    assert h0["tokens"].shape[0] == 4  # local batch
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_vision_task_is_learnable():
+    cfg = PipelineConfig(kind="kws", global_batch=64, n_classes=4,
+                         input_hw=(8, 8), channels=1)
+    b = batch_at(cfg, 0)
+    assert b["x"].shape == (64, 8, 8, 1) and set(np.unique(b["y"])) <= {0, 1, 2, 3}
+
+
+# ----------------------------------------------------------------- optim ---
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = optim.OptimizerConfig(lr=0.1, total_steps=100, warmup=0, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = optim.init(cfg, params)
+    for _ in range(60):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = optim.update(cfg, params, g, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_buffers_frozen_and_s_clipped():
+    cfg = optim.OptimizerConfig(lr=0.1, total_steps=10, warmup=0)
+    params = {
+        "w": jnp.ones((2,)),
+        "w_clip_buf": jnp.array([-1.0, 1.0]),
+        "gain_s": jnp.float32(1.0),
+        "r_adc": jnp.float32(1.0),
+    }
+    grads = {
+        "w": jnp.ones((2,)),
+        "w_clip_buf": jnp.array([9.0, 9.0]),
+        "gain_s": jnp.float32(100.0),
+        "r_adc": jnp.float32(1.0),
+    }
+    state = optim.init(cfg, params)
+    new, state, _ = optim.update(cfg, params, grads, state)
+    np.testing.assert_array_equal(np.asarray(new["w_clip_buf"]),
+                                  np.asarray(params["w_clip_buf"]))
+    # S moved, but driven by a clipped gradient (|g| <= 0.01): the first Adam
+    # step normalizes to ~lr regardless, so check it moved and stayed sane
+    assert 0.0 < float(params["gain_s"] - new["gain_s"]) <= cfg.lr * 1.01
+    # quantizer range uses its own (smaller) LR
+    assert abs(float(new["r_adc"] - params["r_adc"])) <= 1.1e-3
+
+
+def test_adafactor_state_is_factored():
+    cfg = optim.OptimizerConfig(kind="adafactor", factored_min_dim=4)
+    params = {"w": jnp.zeros((128, 64)), "b": jnp.zeros((3,))}
+    state = optim.init(cfg, params)
+    assert state.v["w"].shape == (128,)
+    assert state.v_col["w"].shape == (64,)
+    assert state.v["b"].shape == (3,)  # small: unfactored
+    # memory footprint is ~ (128+64)/8192 of adam's second moment
+    g = {"w": jnp.ones((128, 64)), "b": jnp.ones((3,))}
+    new, st, _ = optim.update(cfg, params, g, state)
+    assert np.isfinite(np.asarray(new["w"])).all()
+
+
+# ----------------------------------------------------------- compression ---
+
+
+def test_compression_error_feedback_preserves_sum():
+    """EF guarantee: sum of decompressed grads ~= sum of true grads."""
+    key = jax.random.PRNGKey(0)
+    err = {"w": jnp.zeros((1000,), jnp.float32)}
+    total_true = np.zeros(1000)
+    total_deq = np.zeros(1000)
+    for i in range(20):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (1000,)) * 0.01}
+        q, scales, err = compression.compress(g, err)
+        deq = compression.decompress(q, scales, g)
+        total_true += np.asarray(g["w"])
+        total_deq += np.asarray(deq["w"])
+    # residual is bounded by one final quantization error, not 20 of them
+    resid = np.abs(total_true - total_deq).max()
+    one_step_err = 0.04 / 127  # ~max|g| / 127
+    assert resid < 5 * one_step_err, resid
+
+
+def test_compression_payload_is_int8():
+    g = {"w": jnp.linspace(-1, 1, 2048)}
+    err = compression.init_error_state(g)
+    q, scales, _ = compression.compress(g, err)
+    assert q["w"].dtype == jnp.int8
+    assert scales["w"].dtype == jnp.float32
+    assert int(jnp.max(jnp.abs(q["w"]))) <= 127

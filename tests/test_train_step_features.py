@@ -1,0 +1,35 @@
+"""make_train_step features: gradient accumulation equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analog import AnalogConfig
+from repro.launch.steps import make_train_step
+from repro.models import ModelConfig, lm
+from repro.training import optim as optim_lib
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = ModelConfig(name="acc", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                      vocab=64, remat=False, dtype=jnp.float32,
+                      attn_chunk_q=16, attn_chunk_kv=16)
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    opt_cfg = optim_lib.OptimizerConfig(lr=1e-2, total_steps=10, warmup=0)
+    key = jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(key, (8, 16), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (8, 16), 0, cfg.vocab),
+    }
+    outs = {}
+    for accum in (1, 4):
+        step = make_train_step(cfg, AnalogConfig(), opt_cfg, accum_steps=accum)
+        p, o, m = jax.jit(step)(
+            params, optim_lib.init(opt_cfg, params), batch, key)
+        outs[accum] = (p, float(m["loss"]))
+    assert abs(outs[1][1] - outs[4][1]) < 1e-5
+    for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-5)
