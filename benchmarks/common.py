@@ -125,6 +125,27 @@ def train_model(
     return params
 
 
+def _protocol_accuracy(params, cfg: CNNConfig, analog_cfg, rng, n_batches: int) -> float:
+    """Mean accuracy over the shared eval protocol (fixed batches 50k+i)."""
+    pipe = pipe_for(cfg)
+    accs = []
+    for i in range(n_batches):
+        b = jax.tree.map(jnp.asarray, batch_at(pipe, 50_000 + i))
+        logits = cnn_apply(
+            params, b["x"], analog_cfg, cfg,
+            rng=jax.random.fold_in(rng, i) if analog_cfg.needs_rng else None,
+        )
+        accs.append(float((logits.argmax(-1) == b["y"]).mean()))
+    return float(np.mean(accs))
+
+
+def eval_program_accuracy(program, cfg: CNNConfig, *, n_batches: int = 4) -> float:
+    """Accuracy of one compiled chip (frozen conductances, no per-call RNG)."""
+    return _protocol_accuracy(
+        program.params, cfg, program.cfg, jax.random.PRNGKey(0), n_batches
+    )
+
+
 def eval_accuracy(
     params,
     cfg: CNNConfig,
@@ -133,22 +154,33 @@ def eval_accuracy(
     n_batches: int = 4,
     n_draws: int = 3,
     seed: int = 123,
+    program_once: bool = True,
 ) -> tuple[float, float]:
-    """(mean, std) accuracy over PCM noise draws (paper uses 25 runs)."""
-    pipe = pipe_for(cfg)
+    """(mean, std) accuracy over PCM noise draws (paper uses 25 runs).
+
+    With ``program_once`` (default) each PCM draw programs one simulated
+    chip via ``engine.compile_program`` and evaluates every batch against
+    those frozen conductances -- the paper's N-chips protocol and the
+    deployment lifecycle. Note the 1/f read noise is frozen with them (one
+    realization per chip, bit-exact executes); for i.i.d. per-forward read
+    noise pass ``program_once=False``, which re-simulates the full PCM
+    chain (including programming) inside every forward call.
+    """
+    from repro.core import engine
+    from repro.models.analognet import crossbar_transforms
+
     accs = []
     for d in range(n_draws):
         rng = jax.random.PRNGKey(seed + d)
-        batch_accs = []
-        for i in range(n_batches):
-            b = jax.tree.map(jnp.asarray, batch_at(pipe, 50_000 + i))
-            logits = cnn_apply(
-                params, b["x"], analog_cfg, cfg,
-                rng=jax.random.fold_in(rng, i)
-                if analog_cfg.mode != "digital" else None,
+        if analog_cfg.mode == "pcm_infer" and program_once:
+            program = engine.compile_program(
+                params, analog_cfg, rng, transforms=crossbar_transforms(cfg)
             )
-            batch_accs.append(float((logits.argmax(-1) == b["y"]).mean()))
-        accs.append(float(np.mean(batch_accs)))
+            accs.append(eval_program_accuracy(program, cfg, n_batches=n_batches))
+        else:
+            accs.append(
+                _protocol_accuracy(params, cfg, analog_cfg, rng, n_batches)
+            )
     return float(np.mean(accs)), float(np.std(accs))
 
 

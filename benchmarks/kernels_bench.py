@@ -41,6 +41,18 @@ def run(fast: bool = False) -> list[str]:
             f"analog_mvm_kernel_{m}x{k}x{n}", us_ker,
             f"tpu_roofline_us={fused_bytes/HBM_BW*1e6:.1f}"
             f"_traffic_saving={unfused_bytes/fused_bytes:.2f}x"))
+
+        # pcm_infer serving shape: pre-quantized inputs (no DAC stage) with
+        # the GDC out_scale epilogue fused into the kernel flush -- the
+        # execute phase of a compiled CiMProgram.
+        gdc = jnp.float32(1.3)
+        us_serve = time_call(
+            lambda x, w: analog_mvm(
+                x, w, r_adc=ra, r_dac=None, out_scale=gdc, interpret=True),
+            x, w, iters=2)
+        rows.append(csv_row(
+            f"analog_mvm_gdc_epilogue_{m}x{k}x{n}", us_serve,
+            f"tpu_roofline_us={fused_bytes/HBM_BW*1e6:.1f}_fused_gdc"))
     return rows
 
 

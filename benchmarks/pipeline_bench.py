@@ -1,13 +1,52 @@
-"""Sec. 5.2: layer-serial pipeline never stalls the array (cycle simulator).
+"""Sec. 5.2: layer-serial pipeline never stalls the array (cycle simulator),
+plus the serving-path comparison for the program-once engine.
 
 Verifies the never-stall claim per bitwidth and shows the counterfactual
-(a 100 MHz datapath) that motivates the 800 MHz design point."""
+(a 100 MHz datapath) that motivates the 800 MHz design point. The
+``serve_*`` rows time repeated analog inference through (a) the legacy
+per-call pcm_infer path, which re-simulates the full PCM program/drift/read
+chain inside every forward, and (b) a compiled CiMProgram, which programs
+once and executes many -- the hardware lifecycle and the serving hot path."""
 
 from __future__ import annotations
 
-from benchmarks.common import csv_row
+import jax
+
+from benchmarks.common import KWS_BENCH, csv_row, time_call
+from repro.core import engine
+from repro.core.analog import AnalogConfig
 from repro.core.pipeline_sim import PipelineConfig, simulate
 from repro.models import analognet_kws_config, analognet_vww_config, layer_shapes
+from repro.models.analognet import cnn_apply, cnn_init, crossbar_transforms
+
+
+def _serving_rows(fast: bool) -> list[str]:
+    cfg = KWS_BENCH
+    acfg = AnalogConfig().infer(b_adc=8, t_seconds=86400.0)
+    params = cnn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(
+        jax.random.PRNGKey(1), (32,) + cfg.input_hw + (cfg.in_channels,)
+    )
+    iters = 3 if fast else 10
+
+    percall = jax.jit(
+        lambda p, x, rng: cnn_apply(p, x, acfg, cfg, rng=rng)
+    )
+    us_percall = time_call(percall, params, x, jax.random.PRNGKey(2), iters=iters)
+
+    program = engine.compile_program(
+        params, acfg, jax.random.PRNGKey(2), transforms=crossbar_transforms(cfg)
+    )
+    programmed = jax.jit(
+        lambda p, x: cnn_apply(p, x, program.cfg, cfg)
+    )
+    us_prog = time_call(programmed, program.params, x, iters=iters)
+    return [
+        csv_row("serve_percall_pcm", us_percall,
+                "reprograms_every_forward"),
+        csv_row("serve_programmed_pcm", us_prog,
+                f"program_once_speedup={us_percall / max(us_prog, 1e-9):.2f}x"),
+    ]
 
 
 def run(fast: bool = False) -> list[str]:
@@ -22,6 +61,7 @@ def run(fast: bool = False) -> list[str]:
                 f"pipeline_{name}_{bits}b", rep.latency_s * 1e6,
                 f"stall={rep.stall_fraction*100:.1f}%"
                 f"_at100MHz={slow.stall_fraction*100:.1f}%"))
+    rows.extend(_serving_rows(fast))
     return rows
 
 

@@ -1,24 +1,33 @@
 """End-to-end co-design scenario (the paper's headline experiment, scaled):
 
 1. train a dense KWS-style CNN with the two-stage HW-aware methodology,
-2. deploy onto the calibrated PCM CiM simulator,
+2. deploy onto the calibrated PCM CiM simulator via the program-once engine:
+   each simulated chip is programmed a single time (engine.compile_program),
+   then *the same programmed conductances* are re-evaluated at later times
+   with CiMProgram.drift_to -- the hardware lifecycle,
 3. sweep drift time x activation bitwidth -> accuracy table (Fig. 7),
-4. report the AON-CiM latency/energy for the same model (Table 2 rows).
+4. report the AON-CiM latency/energy + the physical array mapping for the
+   same model (Table 2 / Fig. 6 rows).
 
     PYTHONPATH=src python examples/analog_deployment.py [--full]
 """
 
 import argparse
 
+import jax
+import numpy as np
+
 from benchmarks import common
-from repro.core import aoncim
+from repro.core import aoncim, engine
 from repro.core.analog import AnalogConfig
-from repro.models.analognet import layer_shapes
+from repro.models.analognet import crossbar_transforms, layer_shapes
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--chips", type=int, default=2,
+                    help="independently programmed chips per config")
     args = ap.parse_args()
     s = 60 if args.full else 25
 
@@ -31,15 +40,36 @@ def main() -> None:
     acc_fp, _ = common.eval_accuracy(models[8], common.KWS_BENCH, AnalogConfig())
     print(f"digital eval accuracy: {acc_fp:.3f}")
 
-    print("\n== PCM deployment: accuracy vs drift time (Fig. 7 protocol) ==")
+    print("\n== PCM deployment: program once, drift_to each time (Fig. 7) ==")
+    # One program per (bits, chip); every time point re-evaluates the SAME
+    # programmed conductances -- programming noise is frozen in the devices.
+    transforms = crossbar_transforms(common.KWS_BENCH)
+    programs = {
+        bits: [
+            engine.compile_program(
+                params, AnalogConfig().infer(b_adc=bits, t_seconds=25.0),
+                jax.random.PRNGKey(1000 + c), transforms=transforms,
+                # the physical mapping depends only on layer shapes --
+                # identical across chips/bitwidths, so pack it just once
+                with_mapping=(bits == 8 and c == 0),
+            )
+            for c in range(args.chips)
+        ]
+        for bits, params in models.items()
+    }
+    n_layers = programs[8][0].n_layers
+    print(f"programmed {n_layers} layers x {args.chips} chips x "
+          f"{len(models)} bitwidths (once each)")
     print(f"{'time':>6} " + " ".join(f"{b}-bit" for b in models))
     for tname, t in [("25s", 25.0), ("1h", 3600.0), ("1d", 86400.0),
                      ("1mo", 2.6e6), ("1y", 3.15e7)]:
         accs = []
-        for bits, params in models.items():
-            pcm = AnalogConfig().infer(b_adc=bits, t_seconds=t)
-            a, _ = common.eval_accuracy(params, common.KWS_BENCH, pcm, n_draws=2)
-            accs.append(a)
+        for bits in models:
+            chip_accs = [
+                common.eval_program_accuracy(p.drift_to(t), common.KWS_BENCH)
+                for p in programs[bits]
+            ]
+            accs.append(float(np.mean(chip_accs)))
         print(f"{tname:>6} " + " ".join(f"{a:.3f}" for a in accs))
 
     print("\n== AON-CiM layer-serial execution (Table 2 protocol) ==")
@@ -49,6 +79,10 @@ def main() -> None:
         print(f"{bits}-bit: {p.inf_per_s:,.0f} inf/s, {p.tops:.3f} TOPS, "
               f"{p.tops_per_w:.2f} TOPS/W, {p.uj_per_inf:.2f} uJ/inf, "
               f"utilization {p.mapping.utilization*100:.1f}%")
+
+    mapping = programs[8][0].mapping  # already built at program time
+    print(f"\ncompiled program mapping: {mapping.n_arrays} array(s), "
+          f"occupancy {mapping.occupancy*100:.1f}%")
 
 
 if __name__ == "__main__":

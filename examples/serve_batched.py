@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core import engine
 from repro.core.analog import AnalogConfig
 from repro.models import lm
 from repro.models.lm import init_lm_cache, unstack_cache
@@ -20,12 +21,19 @@ from repro.models.lm import init_lm_cache, unstack_cache
 def serve(cfg, acfg, requests, max_new_tokens, rng):
     """requests: (B, S) prompt tokens -> (B, max_new_tokens) generations."""
     params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    if acfg.mode == "pcm_infer":
+        # Program-once deployment: the PCM chain runs a single time here;
+        # prefill and every decode step execute the programmed conductances
+        # (mode becomes pcm_programmed -- no per-step RNG needed).
+        program = engine.compile_program(params, acfg, rng)
+        params, acfg = program.params, program.cfg
+    needs_rng = acfg.needs_rng  # per-call noise modes draw per step
     b, s = requests.shape
     cache = init_lm_cache(cfg, b, s + max_new_tokens, cfg.dtype)
     logits, cache = lm.lm_forward(
         params, {"tokens": requests}, acfg, cfg, cache=cache,
         last_token_only=True,
-        rng=rng if acfg.mode != "digital" else None,
+        rng=rng if needs_rng else None,
     )
     cache = unstack_cache(cache)
 
@@ -33,7 +41,7 @@ def serve(cfg, acfg, requests, max_new_tokens, rng):
     def decode(tokens, cache, key):
         logits, cache = lm.lm_forward(
             params, {"tokens": tokens}, acfg, cfg, cache=cache,
-            rng=key if acfg.mode != "digital" else None,
+            rng=key if needs_rng else None,
         )
         return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), cache
 

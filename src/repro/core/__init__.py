@@ -5,11 +5,12 @@ Public API:
   * noise     -- noise-injection training (Eq. 1-2) with STE clip
   * pcm       -- calibrated PCM statistical model (program/drift/read, GDC)
   * analog    -- AnalogLinear / analog_matmul with digital/train/infer modes
+  * engine    -- program-once / execute-many CiM deployment (CiMProgram)
   * crossbar  -- im2col, depthwise densification, layer-serial tiler
   * aoncim    -- AON-CiM cycle/energy model (Table 2 / Fig. 8)
 """
 
-from repro.core import analog, aoncim, crossbar, noise, pcm, quant  # noqa: F401
+from repro.core import analog, aoncim, crossbar, engine, noise, pcm, quant  # noqa: F401
 from repro.core.analog import (  # noqa: F401
     ANALOG_TRAIN,
     DIGITAL,
@@ -19,4 +20,10 @@ from repro.core.analog import (  # noqa: F401
     analog_matmul,
     linear_apply,
     linear_init,
+)
+from repro.core.engine import (  # noqa: F401
+    PCM_PROGRAMMED,
+    CiMProgram,
+    ExecutionPlan,
+    compile_program,
 )

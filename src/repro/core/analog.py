@@ -1,19 +1,36 @@
 """AnalogLinear / AnalogConv: analog-CiM-deployable layers (paper Sec. 3-4).
 
 Every stationary-weight matmul in the framework goes through
-:func:`analog_matmul`, which has three execution paths selected by
-``AnalogConfig.mode``:
+:func:`analog_matmul`, a thin *plan dispatcher* over the program/execute
+engine (:mod:`repro.core.engine`). Execution modes (``AnalogConfig.mode``):
 
-  * ``digital``       -- plain matmul (FP baseline / fastest training).
-  * ``analog_train``  -- the paper's HW-aware training graph (Fig. 4):
-                          STE weight clip -> Gaussian noise injection (Eq. 1)
-                          -> DAC fake-quant on inputs -> MVM -> per-crossbar-
-                          tile ADC fake-quant on partial sums -> digital sum.
-  * ``pcm_infer``     -- deployment simulation: weights pass through the
-                          calibrated PCM chain (program/drift/read noise,
-                          pcm.py), inputs/outputs through *hard* DAC/ADC
-                          quantizers, and global drift compensation is applied
-                          digitally to the ADC outputs.
+  * ``digital``        -- plain matmul (FP baseline / fastest training).
+  * ``analog_train``   -- the paper's HW-aware training graph (Fig. 4):
+                           STE weight clip -> Gaussian noise injection (Eq. 1)
+                           -> DAC fake-quant on inputs -> MVM -> per-crossbar-
+                           tile ADC fake-quant on partial sums -> digital sum.
+  * ``pcm_infer``      -- per-call deployment simulation: weights pass through
+                           the calibrated PCM chain (program/drift/read noise,
+                           pcm.py) on *every* forward call. Use this for
+                           statistical accuracy sweeps where each call should
+                           be an independent chip/noise draw.
+  * ``pcm_programmed`` -- execute phase of a compiled
+                           :class:`~repro.core.engine.CiMProgram`: weights in
+                           the param tree are already PCM effective weights
+                           (programmed ONCE by ``engine.compile_program``)
+                           and each layer carries its GDC ``out_scale_buf``.
+                           This is the serving path: no weight-domain work
+                           per call, kernel-fusable GDC epilogue.
+
+Program-once / execute-many lifecycle (matches the hardware, Sec. 5):
+
+    program = engine.compile_program(params, AnalogConfig().infer(), key)
+    logits = model_forward(program.params, batch, program.cfg, ...)  # many x
+    aged = program.drift_to(30 * 86400.0)  # same chip, one month later
+
+All modes share one execute hot path (``engine.execute_mvm``), which
+dispatches between the fused Pallas kernel and the jnp reference according
+to the layer's static :class:`~repro.core.engine.ExecutionPlan`.
 
 Faithfulness note: when a layer's fan-in exceeds the physical array rows
 (1024), the layer is split across row tiles and the hardware ADC-converts each
@@ -30,9 +47,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as engine_lib
 from repro.core import noise as noise_lib
 from repro.core import pcm as pcm_lib
 from repro.core import quant as quant_lib
+from repro.core.engine import PCM_PROGRAMMED
 from repro.core.quant import QuantSpec
 
 Array = jax.Array
@@ -62,6 +81,15 @@ class AnalogConfig:
     def spec(self) -> QuantSpec:
         return QuantSpec(b_adc=self.b_adc, quant_noise_p=self.quant_noise_p)
 
+    @property
+    def needs_rng(self) -> bool:
+        """True for modes that draw fresh noise on every forward call.
+
+        ``digital`` draws nothing; ``pcm_programmed`` executes a compiled
+        CiMProgram whose noise is frozen in the programmed weights.
+        """
+        return self.mode in (ANALOG_TRAIN, PCM_INFER)
+
     def train(self, **kw) -> "AnalogConfig":
         return dataclasses.replace(self, mode=ANALOG_TRAIN, **kw)
 
@@ -85,47 +113,6 @@ class AnalogCtx:
         return jax.random.fold_in(self.key, self.layer_counter)
 
 
-def _tile_matmul_quant(
-    x: Array,
-    w: Array,
-    r_adc: Array,
-    spec: QuantSpec,
-    tile_rows: int,
-    per_tile_adc: bool,
-    qn_key: Optional[Array],
-    out_scale: Array | float = 1.0,
-) -> Array:
-    """MVM with per-row-tile ADC quantization and digital accumulation.
-
-    x: (..., K)  w: (K, N). Partial sums over each K-tile of ``tile_rows``
-    rows are ADC-quantized independently (each physical tile has its own
-    bitline ADCs sharing the same fixed gain), then summed digitally and
-    scaled by ``out_scale`` (the GDC factor; 1.0 during training).
-    """
-    k = w.shape[0]
-    acc_dtype = jnp.float32
-    if not per_tile_adc or k <= tile_rows:
-        y = jnp.matmul(x, w, preferred_element_type=acc_dtype)
-        y = quant_lib.adc_quantize(y, r_adc, spec, qn_key)
-        return (y * out_scale).astype(x.dtype)
-
-    n_tiles = -(-k // tile_rows)
-    pad = n_tiles * tile_rows - k
-    if pad:
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-        w = jnp.pad(w, [(0, pad), (0, 0)])
-    xt = x.reshape(x.shape[:-1] + (n_tiles, tile_rows))
-    wt = w.reshape(n_tiles, tile_rows, w.shape[-1])
-    # (..., T, rows) x (T, rows, N) -> (..., T, N): one MVM per physical tile.
-    y_tiles = jnp.einsum(
-        "...tk,tkn->...tn", xt, wt, preferred_element_type=acc_dtype
-    )
-    y_tiles = quant_lib.adc_quantize(y_tiles, r_adc, spec, qn_key)
-    # per-tile quantized partials are grid values: store at compute dtype
-    y = jnp.sum(y_tiles.astype(x.dtype), axis=-2, dtype=acc_dtype)
-    return (y * out_scale).astype(x.dtype)
-
-
 def analog_matmul(
     x: Array,
     w: Array,
@@ -134,11 +121,21 @@ def analog_matmul(
     w_min: Array,
     w_max: Array,
     ctx: AnalogCtx,
+    out_scale: Optional[Array] = None,
 ) -> Array:
-    """The framework-wide analog-aware matmul. x: (..., K), w: (K, N)."""
+    """The framework-wide analog-aware matmul. x: (..., K), w: (K, N).
+
+    A plan dispatcher: derives the layer's static ExecutionPlan (cached per
+    (config, K, N)) and routes every mode through the engine's unified
+    execute phase. ``out_scale`` is the layer's GDC scalar in
+    ``pcm_programmed`` mode (``None`` elsewhere, or for layers that were
+    not part of the compiled program).
+    """
     cfg = ctx.cfg
     if cfg.mode == DIGITAL:
-        return jnp.matmul(x, w.astype(x.dtype))
+        return engine_lib.execute_digital(x, w)
+
+    plan = engine_lib.plan_for(cfg, int(w.shape[-2]), int(w.shape[-1]))
 
     # fake-quant promotes to f32 (range params are f32); keep the analog
     # chain in f32 internally and restore the caller's dtype at the end
@@ -148,7 +145,11 @@ def analog_matmul(
         w_key = ctx.next_key()
         w_eff = noise_lib.inject(w_key, w, cfg.eta, w_min, w_max)
         qn_key_in = ctx.next_key() if spec.quant_noise_p < 1.0 else None
-        qn_key_out = ctx.next_key() if spec.quant_noise_p < 1.0 else None
+        qn_key_out = (
+            ctx.next_key()
+            if spec.quant_noise_p < 1.0 and not cfg.use_kernel
+            else None
+        )
         x_q = quant_lib.dac_quantize(
             x, r_adc, ctx.gain_s, w_max, spec, qn_key_in
         )
@@ -156,46 +157,44 @@ def analog_matmul(
         # exactly representable in bf16 -- keeping the inter-quantizer chain
         # in f32 doubles both HBM traffic and the FSDP weight-gather volume
         x_q = x_q.astype(out_dtype)
-        if cfg.use_kernel:
-            from repro.kernels import ops as kernel_ops
-
-            return kernel_ops.analog_mvm(
-                x_q,
-                w_eff.astype(x_q.dtype),
-                r_adc=jnp.abs(r_adc),
-                bits=spec.b_adc,
-                tile_rows=cfg.tile_rows,
-                per_tile_adc=cfg.per_tile_adc,
-                interpret=cfg.interpret,
-            ).astype(out_dtype)
-        return _tile_matmul_quant(
+        return engine_lib.execute_mvm(
             x_q,
             w_eff.astype(x_q.dtype),
             r_adc,
-            spec,
-            cfg.tile_rows,
-            cfg.per_tile_adc,
-            qn_key_out,
+            plan,
+            qn_key=qn_key_out,
+        ).astype(out_dtype)
+
+    if cfg.mode == PCM_PROGRAMMED:
+        # Execute phase: ``w`` already holds PCM effective weights from a
+        # compiled CiMProgram; no per-call weight work, no RNG required.
+        x_q = quant_lib.dac_quantize(x, r_adc, ctx.gain_s, w_max, spec, None)
+        x_q = x_q.astype(out_dtype)
+        scale = 1.0 if out_scale is None else out_scale
+        return engine_lib.execute_mvm(
+            x_q,
+            w.astype(x_q.dtype),
+            r_adc,
+            plan,
+            out_scale=scale,
         ).astype(out_dtype)
 
     if cfg.mode == PCM_INFER:
         w_key = ctx.next_key()
         if w_key is None:
             raise ValueError("pcm_infer requires an RNG key in the AnalogCtx")
+        engine_lib.record_program_event()  # per-call reprogramming (legacy)
         w_c = jnp.clip(w, w_min, w_max)
         w_eff, gdc = pcm_lib.simulate_weights(
             w_key, w_c.astype(jnp.float32), cfg.t_seconds, cfg.pcm
         )
         x_q = quant_lib.dac_quantize(x, r_adc, ctx.gain_s, w_max, spec, None)
         x_q = x_q.astype(out_dtype)
-        return _tile_matmul_quant(
+        return engine_lib.execute_mvm(
             x_q,
             w_eff.astype(x_q.dtype),
             r_adc,
-            spec,
-            cfg.tile_rows,
-            cfg.per_tile_adc,
-            None,
+            plan,
             out_scale=gdc,
         ).astype(out_dtype)
 
@@ -240,6 +239,7 @@ def linear_apply(params: dict, x: Array, ctx: AnalogCtx) -> Array:
         w_min=w_min,
         w_max=w_max,
         ctx=ctx,
+        out_scale=params.get("out_scale_buf"),
     )
     if "b" in params:
         # Bias is applied in the digital domain, after the ADC (paper Sec. 3.1).

@@ -117,6 +117,7 @@ class Placement:
     rows: int
     cols: int
     row_tile_of_layer: int  # which K-tile of the layer this block holds
+    array_index: int = 0  # which physical array holds this block
 
 
 @dataclasses.dataclass
@@ -216,27 +217,34 @@ def map_layers(
 
     for layer, rt, r, c in blocks:
         pos = None
-        for free in arrays:
+        arr_idx = 0
+        for arr_idx, free in enumerate(arrays):
             pos = place_in(free, r, c)
             if pos is not None:
                 break
         if pos is None:
             arrays.append([(0, 0, array_rows, array_cols)])
+            arr_idx = len(arrays) - 1
             pos = place_in(arrays[-1], r, c)
             assert pos is not None, (layer.name, r, c)
-        placements.append(Placement(layer, pos[0], pos[1], r, c, rt))
+        placements.append(Placement(layer, pos[0], pos[1], r, c, rt, arr_idx))
 
     return Mapping(array_rows, array_cols, placements, max(len(arrays), 1))
 
 
 def occupancy_grid(mapping: Mapping, array_index: int = 0) -> np.ndarray:
-    """Dense 0/1 grid of claimed cells for visual/debug inspection (Fig. 6)."""
+    """Dense 0/1 grid of claimed cells for visual/debug inspection (Fig. 6).
+
+    ``array_index`` selects the physical array of a multi-array mapping
+    (each Placement records which array it landed on during packing).
+    """
+    if not 0 <= array_index < mapping.n_arrays:
+        raise ValueError(
+            f"array_index {array_index} out of range for "
+            f"{mapping.n_arrays}-array mapping"
+        )
     grid = np.zeros((mapping.array_rows, mapping.array_cols), np.int32)
-    # Recompute placements per array in insertion order (array idx not stored
-    # on Placement; regenerate by replay). Simplest: mark all placements on a
-    # single grid when n_arrays == 1.
-    if mapping.n_arrays != 1:
-        raise ValueError("occupancy_grid supports single-array mappings")
     for p in mapping.placements:
-        grid[p.row0 : p.row0 + p.rows, p.col0 : p.col0 + p.cols] += 1
+        if p.array_index == array_index:
+            grid[p.row0 : p.row0 + p.rows, p.col0 : p.col0 + p.cols] += 1
     return grid

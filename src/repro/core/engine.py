@@ -1,0 +1,568 @@
+"""Program-once / execute-many engine for analog CiM inference.
+
+On the real AON-CiM accelerator (paper Sec. 5) deployment is a two-phase
+lifecycle:
+
+  1. **Program phase** -- every layer's weights are written into the PCM
+     crossbar exactly once. Programming (write) noise is drawn at that
+     moment and is thereafter *frozen in the devices*; what changes over a
+     deployment's lifetime is conductance drift and instantaneous read
+     noise. The layer-serial mapper statically places every layer on the
+     physical array before any inference runs.
+
+  2. **Execute phase** -- inferences run against the programmed
+     conductances: DAC -> crossbar MVM -> per-row-tile ADC -> digital
+     accumulation -> GDC scaling. No weight-domain work happens per call.
+
+:func:`compile_program` reproduces that lifecycle for an arbitrary param
+pytree: it walks the tree once, applies the PCM programming chain to every
+analog layer, derives a static :class:`ExecutionPlan` per layer (row-tile
+split, column strips, kernel-vs-jnp selection, quant spec) from the crossbar
+geometry, and returns a :class:`CiMProgram` whose ``params`` drop into the
+model's normal ``apply`` functions. :meth:`CiMProgram.drift_to` re-evaluates
+the *same* programmed conductances at a later wall-clock time -- drift and
+read noise change, programming noise does not.
+
+The execute phase is the single hot-path MVM entry (:func:`execute_mvm`)
+shared by all ``AnalogConfig`` modes: ``analog_train`` feeds it
+noise-injected weights, ``pcm_infer``/programmed inference feed it PCM
+effective weights plus the GDC ``out_scale`` epilogue. With
+``use_kernel=True`` it runs the fused Pallas kernel, which keeps per-tile
+partial sums in VMEM instead of materializing the (..., T, N) tensor in HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pcm as pcm_lib
+from repro.core import quant as quant_lib
+from repro.core.crossbar import LayerShape, Mapping, map_layers
+from repro.core.quant import QuantSpec
+
+Array = jax.Array
+
+#: AnalogConfig.mode for inference against a compiled CiMProgram: weights in
+#: the params tree are already PCM effective weights and each layer carries
+#: its ``out_scale_buf`` GDC scalar -- the execute phase does no weight work.
+PCM_PROGRAMMED = "pcm_programmed"
+
+# Trace-time programming counter. Incremented by every per-layer programming
+# event (both compile_program and the legacy per-call pcm_infer path run it
+# under Python control flow, so jit traces count once per layer per trace).
+# Lets tests assert the program-once contract: after compile_program, an
+# entire serving loop -- including its first traced step -- adds zero.
+_PROGRAM_EVENTS = {"layers": 0}
+
+
+def program_event_count() -> int:
+    """Number of per-layer PCM programming events since process start."""
+    return _PROGRAM_EVENTS["layers"]
+
+
+def record_program_event() -> None:
+    """Count one per-layer programming event (trace-time bookkeeping)."""
+    _PROGRAM_EVENTS["layers"] += 1
+
+
+# ---------------------------------------------------------------------------
+# Execution plans (static, derived from crossbar geometry + AnalogConfig)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Static per-layer execution plan for the unified MVM hot path."""
+
+    k: int  # fan-in (crossbar source lines spanned)
+    n: int  # fan-out (bitlines spanned)
+    tile_rows: int  # physical array rows -> row-tile split granularity
+    tile_cols: int  # physical array cols -> column strips
+    per_tile_adc: bool
+    spec: QuantSpec
+    use_kernel: bool
+    interpret: bool
+
+    @property
+    def n_row_tiles(self) -> int:
+        return max(1, math.ceil(self.k / self.tile_rows))
+
+    @property
+    def n_col_strips(self) -> int:
+        return max(1, math.ceil(self.n / self.tile_cols))
+
+
+@functools.lru_cache(maxsize=4096)
+def plan_for(cfg, k: int, n: int) -> ExecutionPlan:
+    """Derive (and cache) the static execution plan for a (K, N) layer.
+
+    ``cfg`` is a (hashable, frozen) AnalogConfig; the plan is pure geometry
+    + mode flags, so one cache entry serves every call of the same shape.
+    """
+    return ExecutionPlan(
+        k=k,
+        n=n,
+        tile_rows=cfg.tile_rows,
+        tile_cols=cfg.tile_cols,
+        per_tile_adc=cfg.per_tile_adc,
+        spec=cfg.spec,
+        use_kernel=cfg.use_kernel,
+        interpret=cfg.interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Execute phase: the one hot-path MVM used by all modes
+# ---------------------------------------------------------------------------
+
+
+def execute_digital(x: Array, w: Array) -> Array:
+    """Digital baseline MVM (mode == "digital")."""
+    return jnp.matmul(x, w.astype(x.dtype))
+
+
+def tile_matmul_quant(
+    x: Array,
+    w: Array,
+    r_adc: Array,
+    spec: QuantSpec,
+    tile_rows: int,
+    per_tile_adc: bool,
+    qn_key: Optional[Array],
+    out_scale: Array | float = 1.0,
+) -> Array:
+    """jnp reference execute: per-row-tile ADC quant + digital accumulation.
+
+    x: (..., K)  w: (K, N). Partial sums over each K-tile of ``tile_rows``
+    rows are ADC-quantized independently (each physical tile has its own
+    bitline ADCs sharing the same fixed gain), then summed digitally and
+    scaled by ``out_scale`` (the GDC factor; 1.0 during training). This is
+    the autodiff-able oracle; the fused Pallas kernel (kernels/ops) computes
+    the same function without materializing the (..., T, N) partials in HBM.
+    """
+    k = w.shape[0]
+    acc_dtype = jnp.float32
+    if not per_tile_adc or k <= tile_rows:
+        y = jnp.matmul(x, w, preferred_element_type=acc_dtype)
+        y = quant_lib.adc_quantize(y, r_adc, spec, qn_key)
+        return (y * out_scale).astype(x.dtype)
+
+    n_tiles = -(-k // tile_rows)
+    pad = n_tiles * tile_rows - k
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        w = jnp.pad(w, [(0, pad), (0, 0)])
+    xt = x.reshape(x.shape[:-1] + (n_tiles, tile_rows))
+    wt = w.reshape(n_tiles, tile_rows, w.shape[-1])
+    # (..., T, rows) x (T, rows, N) -> (..., T, N): one MVM per physical tile.
+    y_tiles = jnp.einsum(
+        "...tk,tkn->...tn", xt, wt, preferred_element_type=acc_dtype
+    )
+    y_tiles = quant_lib.adc_quantize(y_tiles, r_adc, spec, qn_key)
+    # per-tile quantized partials are grid values: store at compute dtype
+    y = jnp.sum(y_tiles.astype(x.dtype), axis=-2, dtype=acc_dtype)
+    return (y * out_scale).astype(x.dtype)
+
+
+def execute_mvm(
+    x_q: Array,
+    w_eff: Array,
+    r_adc: Array,
+    plan: ExecutionPlan,
+    *,
+    out_scale: Array | float = 1.0,
+    qn_key: Optional[Array] = None,
+) -> Array:
+    """Unified execute-phase MVM: pre-quantized inputs x effective weights.
+
+    Dispatches to the fused Pallas kernel when the plan selects it (the
+    kernel keeps per-tile partials in VMEM and fuses the GDC epilogue;
+    quant-noise masking is a training-only jnp feature, so a qn_key forces
+    the reference path), otherwise to the jnp reference.
+    """
+    if plan.use_kernel and qn_key is None:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.analog_mvm(
+            x_q,
+            w_eff,
+            r_adc=jnp.abs(r_adc),
+            out_scale=out_scale,
+            bits=plan.spec.b_adc,
+            tile_rows=plan.tile_rows,
+            per_tile_adc=plan.per_tile_adc,
+            interpret=plan.interpret,
+        )
+    return tile_matmul_quant(
+        x_q,
+        w_eff,
+        r_adc,
+        plan.spec,
+        plan.tile_rows,
+        plan.per_tile_adc,
+        qn_key,
+        out_scale,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Program phase: PCM chain applied once, drift re-evaluable
+# ---------------------------------------------------------------------------
+
+
+def _program_2d(key: Array, w: Array, w_min, w_max, cfg: pcm_lib.PCMConfig):
+    """Program one weight block into PCM state (write noise drawn HERE).
+
+    Returns the per-block programming state: programmed differential
+    conductance fractions, the read-noise Q factors (functions of the
+    programming *targets*), the GDC numerator, the weight scale, and the
+    layer key from which drift/read draws are deterministically derived.
+    """
+    w_c = jnp.clip(w, w_min, w_max).astype(jnp.float32)
+    g_pos_t, g_neg_t, w_scale = pcm_lib.weights_to_conductances(w_c)
+    k_pp, k_pn = jax.random.split(key)
+    return {
+        "g_pos": pcm_lib.program(k_pp, g_pos_t, cfg),
+        "g_neg": pcm_lib.program(k_pn, g_neg_t, cfg),
+        "q_pos": pcm_lib.read_noise_q(g_pos_t),
+        "q_neg": pcm_lib.read_noise_q(g_neg_t),
+        "gt_sum": jnp.sum(g_pos_t + g_neg_t),
+        "w_scale": w_scale,
+        "key": key,
+    }
+
+
+def _drift_read_2d(state: dict, t: Array, cfg: pcm_lib.PCMConfig):
+    """Re-evaluate programmed conductances at time ``t`` -> (w_eff, gdc).
+
+    Per-device drift exponents and read-noise draws derive deterministically
+    from the stored layer key: two evaluations of the same program at the
+    same ``t`` are bit-identical, and moving ``t`` changes only the drift /
+    read-noise processes -- never the programming noise.
+    """
+    k_dp, k_dn, k_rp, k_rn = jax.random.split(state["key"], 4)
+    g_pos, g_neg = state["g_pos"], state["g_neg"]
+    if cfg.drift:
+        nu_p = pcm_lib.sample_drift_nu(k_dp, g_pos.shape, cfg)
+        nu_n = pcm_lib.sample_drift_nu(k_dn, g_neg.shape, cfg)
+        g_pos = g_pos * pcm_lib.drift_factor(nu_p, t)
+        g_neg = g_neg * pcm_lib.drift_factor(nu_n, t)
+    if cfg.gdc:
+        gdc = state["gt_sum"] / (jnp.sum(g_pos + g_neg) + 1e-12)
+    else:
+        gdc = jnp.ones((), jnp.float32)
+    if cfg.read_noise:
+        scale_t = pcm_lib.read_noise_scale(t)
+        g_pos = jnp.maximum(
+            g_pos
+            + g_pos * state["q_pos"] * scale_t
+            * jax.random.normal(k_rp, g_pos.shape, jnp.float32),
+            0.0,
+        )
+        g_neg = jnp.maximum(
+            g_neg
+            + g_neg * state["q_neg"] * scale_t
+            * jax.random.normal(k_rn, g_neg.shape, jnp.float32),
+            0.0,
+        )
+    w_eff = (g_pos - g_neg) * state["w_scale"]
+    return w_eff, gdc
+
+
+def _stacked(fn: Callable, n_stack_dims: int) -> Callable:
+    """vmap ``fn`` over ``n_stack_dims`` leading axes of every argument."""
+    for _ in range(n_stack_dims):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def program_weight(
+    key: Array,
+    w: Array,
+    w_min: Array,
+    w_max: Array,
+    t_seconds,
+    cfg: pcm_lib.PCMConfig,
+):
+    """Program a (stack..., K, N) weight tensor once; evaluate at t_seconds.
+
+    Leading axes beyond the trailing (K, N) matrix are treated as stacked
+    independent layers (scanned LM groups, MoE expert banks): each stack
+    member gets its own write-noise draw, weight scale, and GDC scalar.
+    Returns (w_eff, out_scale, state).
+    """
+    record_program_event()
+    stack = w.shape[:-2]
+    t = jnp.asarray(t_seconds, jnp.float32)
+    w_min_b = jnp.broadcast_to(jnp.asarray(w_min, jnp.float32), stack)
+    w_max_b = jnp.broadcast_to(jnp.asarray(w_max, jnp.float32), stack)
+    n_members = math.prod(stack) if stack else 1
+    keys = jax.random.split(key, n_members).reshape(stack + (-1,))
+
+    prog = _stacked(
+        lambda k_, w_, lo, hi: _program_2d(k_, w_, lo, hi, cfg), len(stack)
+    )
+    state = prog(keys, w, w_min_b, w_max_b)
+    w_eff, out_scale = drift_state(state, t, cfg, n_stack_dims=len(stack))
+    return w_eff, out_scale, state
+
+
+def drift_state(
+    state: dict, t_seconds, cfg: pcm_lib.PCMConfig, *, n_stack_dims: int
+):
+    """(w_eff, out_scale) of a programmed state re-evaluated at t_seconds."""
+    t = jnp.asarray(t_seconds, jnp.float32)
+    fn = _stacked(lambda s: _drift_read_2d(s, t, cfg), n_stack_dims)
+    return fn(state)
+
+
+# ---------------------------------------------------------------------------
+# Param-tree walk: find analog layers, program them, rebuild the tree
+# ---------------------------------------------------------------------------
+
+
+def _is_linear_layer(node: dict) -> bool:
+    return (
+        isinstance(node.get("w"), (jax.Array, jnp.ndarray))
+        and "r_adc" in node
+        and "w_clip_buf" in node
+    )
+
+
+def _is_expert_bank(node: dict) -> bool:
+    """MoE expert banks: raw (E, K, N) arrays w1/w3/w2 sharing per-family
+    r_adc (..., 3) and w_clip_buf (..., 3, 2) -- see models/moe.py."""
+    return (
+        all(
+            isinstance(node.get(k), (jax.Array, jnp.ndarray))
+            for k in ("w1", "w3", "w2")
+        )
+        and "r_adc" in node
+        and "w_clip_buf" in node
+        and "w" not in node
+    )
+
+
+_MOE_FAMILIES = ("w1", "w3", "w2")  # row order of r_adc / w_clip_buf
+
+
+#: expert-bank keys consumed by the bank programming itself; sibling entries
+#: (e.g. the MoE dict's "shared" expert linear layers, the digital router)
+#: must still be walked.
+_BANK_KEYS = frozenset(_MOE_FAMILIES) | {"r_adc", "w_clip_buf", "out_scale_buf"}
+
+
+def _walk(tree: Any, fn: Callable[[str, dict], dict], path: str = "") -> Any:
+    """Rebuild ``tree``, applying ``fn(path, node)`` to analog-layer dicts."""
+    if isinstance(tree, dict):
+        if _is_linear_layer(tree):
+            return fn(path, tree)
+        if _is_expert_bank(tree):
+            new = fn(path, tree)
+            for k, v in tree.items():
+                if k not in _BANK_KEYS:
+                    new[k] = _walk(v, fn, f"{path}/{k}" if path else k)
+            return new
+        return {
+            k: _walk(v, fn, f"{path}/{k}" if path else k)
+            for k, v in tree.items()
+        }
+    if hasattr(tree, "_fields"):  # NamedTuple (LMParams)
+        return type(tree)(
+            *(
+                _walk(getattr(tree, f), fn, f"{path}/{f}" if path else f)
+                for f in tree._fields
+            )
+        )
+    if isinstance(tree, (tuple, list)):
+        out = [
+            _walk(v, fn, f"{path}/{i}" if path else str(i))
+            for i, v in enumerate(tree)
+        ]
+        return type(tree)(out) if isinstance(tree, tuple) else out
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# CiMProgram
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CiMProgram:
+    """A compiled analog deployment: programmed params + static plans.
+
+    ``params`` is structurally identical to the source param tree, with
+    every analog layer's weights replaced by PCM effective weights and an
+    ``out_scale_buf`` GDC scalar added -- it drops straight into the model's
+    ``apply``/``forward`` functions together with ``cfg`` (whose mode is
+    :data:`PCM_PROGRAMMED`). ``state`` holds the frozen programming state so
+    :meth:`drift_to` can re-evaluate the same devices at a later time.
+    """
+
+    params: Any
+    cfg: Any  # AnalogConfig with mode == PCM_PROGRAMMED
+    t_seconds: float
+    state: dict[str, Any]
+    plans: dict[str, ExecutionPlan]
+    mapping: Optional[Mapping] = None
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.plans)
+
+    def drift_to(self, t_seconds: float) -> "CiMProgram":
+        """Same programmed conductances, re-evaluated at ``t_seconds``.
+
+        Only drift and read noise change; programming noise (and therefore
+        the underlying device state) is identical to the original program.
+        """
+        pcm_cfg = self.cfg.pcm
+
+        def reprogram(path: str, node: dict) -> dict:
+            st = self.state[path]
+            new = dict(node)
+            if "w" in node:
+                w_eff, gdc = drift_state(
+                    st, t_seconds, pcm_cfg,
+                    n_stack_dims=node["w"].ndim - 2,
+                )
+                new["w"] = w_eff.astype(node["w"].dtype)
+                new["out_scale_buf"] = gdc
+            else:
+                scales = []
+                for fam in _MOE_FAMILIES:
+                    w_eff, gdc = drift_state(
+                        st[fam], t_seconds, pcm_cfg,
+                        n_stack_dims=node[fam].ndim - 2,
+                    )
+                    new[fam] = w_eff.astype(node[fam].dtype)
+                    scales.append(gdc)
+                new["out_scale_buf"] = jnp.stack(scales, axis=-2)
+            return new
+
+        return dataclasses.replace(
+            self,
+            params=_walk(self.params, reprogram),
+            t_seconds=float(t_seconds),
+        )
+
+
+def compile_program(
+    params: Any,
+    cfg: Any,
+    key: Array,
+    *,
+    t_seconds: Optional[float] = None,
+    transforms: Optional[dict[str, Callable[[Array], Array]]] = None,
+    with_mapping: bool = False,
+) -> CiMProgram:
+    """Program phase: walk ``params`` once and build a :class:`CiMProgram`.
+
+    ``cfg`` is an AnalogConfig supplying the PCM model, quant spec, and
+    crossbar geometry; its mode is ignored (the returned program's cfg is
+    the same config with mode set to :data:`PCM_PROGRAMMED`).
+
+    ``transforms`` maps a layer path to a weight-to-crossbar-block function
+    (e.g. im2col flattening / depthwise densification for conv layers) run
+    *before* programming, so write noise lands on the physical cells --
+    including the zero cells of densified depthwise diagonals. Programmed
+    conv weights therefore come back 2D; the layer ``apply`` functions
+    detect that and skip their own flattening.
+
+    ``with_mapping=True`` additionally shelf-packs every programmed block
+    through the layer-serial tiler, attaching the physical array Mapping
+    (placements + utilization) to the program.
+    """
+    t = float(cfg.t_seconds if t_seconds is None else t_seconds)
+    transforms = transforms or {}
+    state: dict[str, Any] = {}
+    plans: dict[str, ExecutionPlan] = {}
+    shapes: list[LayerShape] = []
+    counter = {"n": 0}
+
+    def next_key() -> Array:
+        counter["n"] += 1
+        return jax.random.fold_in(key, counter["n"])
+
+    def add_plan(path: str, w2d: Array, count: int = 1) -> None:
+        k_dim, n_dim = int(w2d.shape[-2]), int(w2d.shape[-1])
+        plans[path] = plan_for(cfg, k_dim, n_dim)
+        for i in range(count):
+            shapes.append(
+                LayerShape(f"{path}[{i}]" if count > 1 else path,
+                           k_dim, n_dim, n_patches=1)
+            )
+
+    def program_node(path: str, node: dict) -> dict:
+        new = dict(node)
+        if "w" in node:
+            w2d = transforms.get(path, lambda w: w)(node["w"])
+            if w2d.ndim > 3:
+                # Only 2D blocks or one stack level (scanned LM groups) are
+                # meaningful crossbar programs; a 4D tensor here is almost
+                # certainly a conv kernel missing its im2col/densify
+                # transform -- programming its spatial dims as independent
+                # layers would be silently wrong.
+                raise ValueError(
+                    f"layer '{path}': weight shape {tuple(w2d.shape)} has "
+                    "more than one stack dim; pass a transforms= entry "
+                    "(e.g. analognet.crossbar_transforms) to flatten conv "
+                    "kernels to their 2D crossbar blocks before programming"
+                )
+            buf = node["w_clip_buf"]
+            w_min, w_max = buf[..., 0], buf[..., 1]
+            w_eff, gdc, st = program_weight(
+                next_key(), w2d, w_min, w_max, t, cfg.pcm
+            )
+            new["w"] = w_eff.astype(node["w"].dtype)
+            new["out_scale_buf"] = gdc
+            state[path] = st
+            n_members = math.prod(w2d.shape[:-2]) if w2d.ndim > 2 else 1
+            add_plan(path, w2d, n_members)
+        else:  # MoE expert bank
+            st_fams, scales = {}, []
+            for f, fam in enumerate(_MOE_FAMILIES):
+                w = node[fam]
+                buf = node["w_clip_buf"]  # (..., 3, 2)
+                stack = w.shape[:-2]
+                w_min = jnp.broadcast_to(
+                    buf[..., f, 0][..., None] if stack else buf[..., f, 0],
+                    stack,
+                )
+                w_max = jnp.broadcast_to(
+                    buf[..., f, 1][..., None] if stack else buf[..., f, 1],
+                    stack,
+                )
+                w_eff, gdc, st = program_weight(
+                    next_key(), w, w_min, w_max, t, cfg.pcm
+                )
+                new[fam] = w_eff.astype(w.dtype)
+                st_fams[fam] = st
+                scales.append(gdc)
+                add_plan(
+                    f"{path}/{fam}", w,
+                    math.prod(stack) if stack else 1,
+                )
+            new["out_scale_buf"] = jnp.stack(scales, axis=-2)
+            state[path] = st_fams
+        return new
+
+    programmed = _walk(params, program_node)
+    mapping = None
+    if with_mapping and shapes:
+        mapping = map_layers(shapes, cfg.tile_rows, cfg.tile_cols)
+    return CiMProgram(
+        params=programmed,
+        cfg=dataclasses.replace(cfg, mode=PCM_PROGRAMMED, quant_noise_p=1.0),
+        t_seconds=t,
+        state=state,
+        plans=plans,
+        mapping=mapping,
+    )

@@ -81,23 +81,45 @@ def program(key: Array, g_target: Array, cfg: PCMConfig = PCMConfig()) -> Array:
     return jnp.clip(g, 0.0, 1.2)  # devices cannot go below 0; slight overshoot ok
 
 
+def sample_drift_nu(key: Array, shape, cfg: PCMConfig = PCMConfig()) -> Array:
+    """Per-device drift exponent nu ~ N(mean, std), truncated at 0."""
+    nu = cfg.drift_nu_mean + cfg.drift_nu_std * jax.random.normal(
+        key, shape, jnp.float32
+    )
+    return jnp.maximum(nu, 0.0)
+
+
+def drift_factor(nu: Array, t_seconds: Array) -> Array:
+    """Multiplicative drift law (t/t_c)^-nu, defined for t >= t_c."""
+    t = jnp.maximum(t_seconds, T_C)
+    return (t / T_C) ** (-nu)
+
+
 def drift(key: Array, g_prog: Array, t_seconds: Array, cfg: PCMConfig = PCMConfig()) -> Array:
     """Conductance drift G_D = G_P (t/t_c)^-nu with per-device nu."""
     if not cfg.drift:
         return g_prog
-    nu = cfg.drift_nu_mean + cfg.drift_nu_std * jax.random.normal(
-        key, g_prog.shape, jnp.float32
-    )
-    nu = jnp.maximum(nu, 0.0)
-    t = jnp.maximum(t_seconds, T_C)  # drift law defined for t >= t_c
-    return g_prog * (t / T_C) ** (-nu)
+    nu = sample_drift_nu(key, g_prog.shape, cfg)
+    return g_prog * drift_factor(nu, t_seconds)
+
+
+def read_noise_q(g_target: Array) -> Array:
+    """Device 1/f noise coefficient Q(G_T) = min(0.0088/g^0.65, 0.2).
+
+    Depends only on the *programming target*; the program-once engine
+    precomputes it so drift re-evaluation never needs the original weights.
+    """
+    return jnp.minimum(0.0088 / jnp.maximum(g_target, 1e-9) ** 0.65, 0.2)
+
+
+def read_noise_scale(t_seconds: Array) -> Array:
+    """Time growth of the 1/f read noise: sqrt(log((t + t_r)/t_r))."""
+    return jnp.sqrt(jnp.log((t_seconds + T_READ) / T_READ))
 
 
 def read_noise_sigma(g_drifted: Array, g_target: Array, t_seconds: Array) -> Array:
     """Instantaneous 1/f read-noise sigma at time t (fractions of G_max)."""
-    q = jnp.minimum(0.0088 / jnp.maximum(g_target, 1e-9) ** 0.65, 0.2)
-    scale = jnp.sqrt(jnp.log((t_seconds + T_READ) / T_READ))
-    return g_drifted * q * scale
+    return g_drifted * read_noise_q(g_target) * read_noise_scale(t_seconds)
 
 
 def read(

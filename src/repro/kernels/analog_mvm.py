@@ -39,7 +39,7 @@ def _quant(v: Array, r: Array, bits: int) -> Array:
 
 
 def _kernel(
-    r_ref,  # (2,) f32 in SMEM: [r_dac, r_adc]
+    r_ref,  # (3,) f32 in SMEM: [r_dac, r_adc, out_scale]
     x_ref,  # (block_m, tile_rows) VMEM
     w_ref,  # (tile_rows, block_n) VMEM
     out_ref,  # (block_m, block_n) VMEM
@@ -81,7 +81,10 @@ def _kernel(
         acc = acc_ref[...]
         if not per_tile_adc:
             acc = _quant(acc, r_adc, b_adc)
-        out_ref[...] = acc.astype(out_ref.dtype)
+        # Digital epilogue: the GDC scalar multiplies the ADC outputs after
+        # accumulation (pcm_infer deployment; 1.0 during training). Fused
+        # here so the programmed-inference path needs no extra HBM pass.
+        out_ref[...] = (acc * r_ref[2]).astype(out_ref.dtype)
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -106,6 +109,7 @@ def analog_mvm_fwd(
     w: Array,
     r_dac: Array,
     r_adc: Array,
+    out_scale: Array | float = 1.0,
     *,
     b_dac: int = 9,
     b_adc: int = 8,
@@ -133,7 +137,11 @@ def analog_mvm_fwd(
     n_k_tiles = kp // tile_rows
     grid = (mp // block_m, np_ // block_n, n_k_tiles)
     ranges = jnp.stack(
-        [jnp.asarray(r_dac, jnp.float32).reshape(()), jnp.asarray(r_adc, jnp.float32).reshape(())]
+        [
+            jnp.asarray(r_dac, jnp.float32).reshape(()),
+            jnp.asarray(r_adc, jnp.float32).reshape(()),
+            jnp.asarray(out_scale, jnp.float32).reshape(()),
+        ]
     )
 
     out = pl.pallas_call(

@@ -8,6 +8,10 @@ gradients. Using the oracle's VJP guarantees fwd/bwd consistency with the
 reference to the last ulp of the STE semantics.
 
 Batched inputs (..., K) are flattened to (M, K) around the kernel.
+
+``out_scale`` is the digital GDC epilogue (global drift compensation) that
+the pcm_infer deployment path applies to the ADC outputs; the kernel fuses
+it into the accumulator flush so programmed inference stays a single pass.
 """
 
 from __future__ import annotations
@@ -25,13 +29,14 @@ Array = jax.Array
 
 @functools.partial(
     jax.custom_vjp,
-    nondiff_argnums=(4, 5, 6, 7, 8, 9),
+    nondiff_argnums=(5, 6, 7, 8, 9, 10),
 )
 def _analog_mvm_2d(
     x: Array,
     w: Array,
     r_dac: Array,
     r_adc: Array,
+    out_scale: Array,
     b_dac: int,
     b_adc: int,
     tile_rows: int,
@@ -44,6 +49,7 @@ def _analog_mvm_2d(
         w,
         r_dac,
         r_adc,
+        out_scale,
         b_dac=b_dac,
         b_adc=b_adc,
         tile_rows=tile_rows,
@@ -53,21 +59,26 @@ def _analog_mvm_2d(
     )
 
 
-def _fwd(x, w, r_dac, r_adc, b_dac, b_adc, tile_rows, per_tile_adc, apply_dac, interpret):
+def _fwd(
+    x, w, r_dac, r_adc, out_scale,
+    b_dac, b_adc, tile_rows, per_tile_adc, apply_dac, interpret,
+):
     y = _analog_mvm_2d(
-        x, w, r_dac, r_adc, b_dac, b_adc, tile_rows, per_tile_adc, apply_dac, interpret
+        x, w, r_dac, r_adc, out_scale,
+        b_dac, b_adc, tile_rows, per_tile_adc, apply_dac, interpret,
     )
-    return y, (x, w, r_dac, r_adc)
+    return y, (x, w, r_dac, r_adc, out_scale)
 
 
 def _bwd(b_dac, b_adc, tile_rows, per_tile_adc, apply_dac, interpret, res, g):
-    x, w, r_dac, r_adc = res
+    x, w, r_dac, r_adc, out_scale = res
     _, vjp = jax.vjp(
-        lambda x_, w_, rd_, ra_: analog_mvm_ref(
+        lambda x_, w_, rd_, ra_, s_: analog_mvm_ref(
             x_,
             w_,
             rd_,
             ra_,
+            s_,
             b_dac=b_dac,
             b_adc=b_adc,
             tile_rows=tile_rows,
@@ -78,6 +89,7 @@ def _bwd(b_dac, b_adc, tile_rows, per_tile_adc, apply_dac, interpret, res, g):
         w,
         r_dac,
         r_adc,
+        out_scale,
     )
     return vjp(g)
 
@@ -91,6 +103,7 @@ def analog_mvm(
     *,
     r_adc: Array,
     r_dac: Array | None = None,
+    out_scale: Array | float = 1.0,
     bits: int = 8,
     tile_rows: int = 1024,
     per_tile_adc: bool = True,
@@ -101,7 +114,8 @@ def analog_mvm(
     ``bits`` is the ADC ENOB; the DAC gets one extra bit (paper Eq. 3). When
     ``r_dac`` is None the input is assumed pre-quantized (the analog.py path
     quantizes inputs with quant-noise masking outside the kernel) and the DAC
-    stage inside the kernel is statically disabled.
+    stage inside the kernel is statically disabled. ``out_scale`` is the GDC
+    scalar applied digitally to the accumulated ADC outputs (1.0 = disabled).
     """
     lead = x.shape[:-1]
     k = x.shape[-1]
@@ -114,6 +128,7 @@ def analog_mvm(
         w,
         jnp.asarray(r_dac, jnp.float32),
         jnp.asarray(r_adc, jnp.float32),
+        jnp.asarray(out_scale, jnp.float32),
         bits + 1,
         bits,
         tile_rows,

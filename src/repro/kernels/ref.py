@@ -29,6 +29,7 @@ def analog_mvm_ref(
     w: Array,
     r_dac: Array,
     r_adc: Array,
+    out_scale: Array | float = 1.0,
     *,
     b_dac: int = 9,
     b_adc: int = 8,
@@ -36,7 +37,12 @@ def analog_mvm_ref(
     per_tile_adc: bool = True,
     apply_dac: bool = True,
 ) -> Array:
-    """x: (M, K), w: (K, N) -> (M, N), float32 accumulation."""
+    """x: (M, K), w: (K, N) -> (M, N), float32 accumulation.
+
+    ``out_scale`` is the digital epilogue factor applied *after* ADC
+    conversion and digital accumulation -- the global drift compensation
+    scalar of the pcm_infer deployment path (1.0 during training).
+    """
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
@@ -44,7 +50,7 @@ def analog_mvm_ref(
 
     if not per_tile_adc or k <= tile_rows:
         y = jnp.matmul(x_q, w, preferred_element_type=jnp.float32)
-        return fake_quant(y, r_adc, b_adc).astype(x.dtype)
+        return (fake_quant(y, r_adc, b_adc) * out_scale).astype(x.dtype)
 
     n_tiles = -(-k // tile_rows)
     pad = n_tiles * tile_rows - k
@@ -55,4 +61,4 @@ def analog_mvm_ref(
     wt = w.reshape(n_tiles, tile_rows, n)
     partials = jnp.einsum("mtk,tkn->mtn", xt, wt, preferred_element_type=jnp.float32)
     partials = fake_quant(partials, r_adc, b_adc)
-    return jnp.sum(partials, axis=1).astype(x.dtype)
+    return (jnp.sum(partials, axis=1) * out_scale).astype(x.dtype)

@@ -3,9 +3,16 @@
 ``python -m repro.launch.serve --arch tinyllama-1.1b --tokens 32 --batch 4``
 
 Runs a (reduced-config) model through the production serving flow:
-prefill(prompt) -> unstack cache -> decode loop, optionally with the full
-analog PCM inference chain (--analog --t-hours 24) to show deployment-time
+prefill(prompt) -> unstack cache -> decode loop, optionally with the analog
+PCM deployment (--analog --t-hours 24) to show deployment-time
 accuracy/latency behaviour of the paper's technique on LMs.
+
+With ``--analog`` the PCM weights are programmed exactly ONCE before the
+decode loop (engine.compile_program: the hardware's program-once /
+execute-many lifecycle); every prefill/decode step then executes against the
+programmed conductances with the GDC epilogue and needs no per-step RNG.
+``--per-call`` restores the legacy behaviour that re-simulates programming
+inside every forward call -- useful only to measure what program-once saves.
 """
 
 from __future__ import annotations
@@ -17,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core import engine
 from repro.core.analog import AnalogConfig
 from repro.models import lm
 from repro.models.lm import init_lm_cache, unstack_cache
@@ -30,11 +38,15 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--analog", action="store_true",
-                    help="serve through the PCM inference simulation")
+                    help="serve through the PCM deployment (program-once)")
+    ap.add_argument("--per-call", action="store_true",
+                    help="legacy: re-simulate PCM programming every forward")
     ap.add_argument("--t-hours", type=float, default=24.0,
                     help="PCM drift time for --analog")
     ap.add_argument("--b-adc", type=int, default=8)
     args = ap.parse_args()
+    if args.per_call and not args.analog:
+        ap.error("--per-call only qualifies --analog (pass both)")
 
     cfg = configs.get_smoke(args.arch)
     acfg = AnalogConfig()
@@ -45,6 +57,16 @@ def main() -> None:
 
     key = jax.random.PRNGKey(0)
     params = lm.lm_init(key, cfg)
+
+    if args.analog and not args.per_call:
+        # Program phase: one pass over the param tree, before any serving.
+        t0 = time.time()
+        program = engine.compile_program(params, acfg, jax.random.PRNGKey(42))
+        params, acfg = program.params, program.cfg
+        print(f"programmed {program.n_layers} analog layers once "
+              f"in {time.time()-t0:.2f}s (t={args.t_hours:.0f}h)")
+    needs_rng = acfg.needs_rng
+
     b, s = args.batch, args.prompt_len
     s_max = s + args.tokens
 
@@ -60,7 +82,7 @@ def main() -> None:
     t0 = time.time()
     logits, cache = lm.lm_forward(
         params, batch, acfg, cfg, cache=cache, last_token_only=True,
-        rng=key if args.analog else None,
+        rng=key if needs_rng else None,
     )
     cache = unstack_cache(cache)
     t_prefill = time.time() - t0
@@ -69,7 +91,7 @@ def main() -> None:
     def decode(params, tokens, cache, rng):
         logits, cache = lm.lm_forward(
             params, {"tokens": tokens}, acfg, cfg, cache=cache,
-            rng=rng if args.analog else None,
+            rng=rng if needs_rng else None,
         )
         return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32), cache
 
@@ -83,7 +105,8 @@ def main() -> None:
     t_decode = time.time() - t0
 
     seqs = jnp.concatenate(out, axis=1)
-    print(f"arch={cfg.name} analog={args.analog} "
+    mode = acfg.mode
+    print(f"arch={cfg.name} analog={args.analog} mode={mode} "
           f"prefill={t_prefill*1e3:.1f}ms "
           f"decode={t_decode/max(args.tokens-1,1)*1e3:.2f}ms/token")
     print("generated token ids (first sequence):",

@@ -4,6 +4,13 @@ Factories close over static config (ModelConfig, AnalogConfig, optimizer) and
 return pure functions of (params, opt_state, batch, rng) suitable for
 jax.jit with in/out shardings. The same functions back the real launcher
 (train.py / serve.py) and the dry-run (dryrun.py).
+
+Analog serving follows the hardware's program-once / execute-many lifecycle:
+call ``engine.compile_program`` ONCE before the decode loop -- it compiles
+the param tree into a CiMProgram (PCM chain applied a single time) -- and
+feed the returned (program.params, program.cfg) to the prefill/serve steps.
+The per-call ``pcm_infer`` mode re-simulates programming on every forward
+and exists for statistical accuracy sweeps, not serving.
 """
 
 from __future__ import annotations
@@ -41,7 +48,7 @@ def make_train_step(
 
     def train_step(params, opt_state, batch, rng):
         step_rng = jax.random.fold_in(rng, opt_state.step)
-        noise_rng = step_rng if analog_cfg.mode != "digital" else None
+        noise_rng = step_rng if analog_cfg.needs_rng else None
 
         if accum_steps <= 1:
             (loss, metrics), grads = jax.value_and_grad(
@@ -86,7 +93,7 @@ def make_prefill_step(cfg: ModelConfig, analog_cfg: AnalogConfig):
     """(params, batch, cache, rng) -> (next_token_logits, cache)."""
 
     def prefill_step(params, batch, cache, rng):
-        noise_rng = rng if analog_cfg.mode != "digital" else None
+        noise_rng = rng if analog_cfg.needs_rng else None
         logits, cache = lm_forward(
             params,
             batch,
@@ -109,7 +116,7 @@ def make_serve_step(cfg: ModelConfig, analog_cfg: AnalogConfig):
     """
 
     def serve_step(params, batch, cache, rng):
-        noise_rng = rng if analog_cfg.mode != "digital" else None
+        noise_rng = rng if analog_cfg.needs_rng else None
         logits, cache = lm_forward(
             params, batch, analog_cfg, cfg, rng=noise_rng, cache=cache
         )

@@ -139,7 +139,12 @@ def conv_apply(
     p: dict, x: Array, spec: ConvSpec, ctx: AnalogCtx, relu: bool = True
 ) -> Array:
     """IM2COL + analog matmul + digital BN/ReLU (the hardware dataflow)."""
-    if spec.depthwise:
+    if p["w"].ndim == 2:
+        # Compiled CiMProgram path: the program phase already flattened /
+        # densified the kernel into its physical crossbar block and applied
+        # the PCM chain, so ``w`` arrives as the programmed 2D matrix.
+        w2d = p["w"]
+    elif spec.depthwise:
         # Depthwise runs as a grouped conv digitally; its *mapping* to the
         # crossbar (densified) is what the baseline analysis quantifies.
         # For analog simulation we densify -- faithfully including the noise
@@ -157,6 +162,7 @@ def conv_apply(
         w_min=p["w_clip_buf"][0],
         w_max=p["w_clip_buf"][1],
         ctx=ctx,
+        out_scale=p.get("out_scale_buf"),
     )
     # BN folded to scale/bias; applied in the digital datapath (Sec. 5.2).
     y = y * p["bn_scale"].astype(y.dtype) + p["bn_bias"].astype(y.dtype)
@@ -179,6 +185,7 @@ def cnn_apply(
         w_min=fc["w_clip_buf"][0],
         w_max=fc["w_clip_buf"][1],
         ctx=ctx,
+        out_scale=fc.get("out_scale_buf"),
     )
     return y + fc["b"].astype(y.dtype)
 
@@ -189,6 +196,23 @@ def cnn_loss(params, batch, analog_cfg, cfg, rng=None):
     nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
     acc = (logits.argmax(-1) == batch["y"]).mean()
     return nll, {"loss": nll, "acc": acc}
+
+
+def crossbar_transforms(cfg: CNNConfig) -> dict:
+    """Weight-to-crossbar-block transforms for ``engine.compile_program``.
+
+    Maps each conv layer's param path to the function that flattens its 4D
+    kernel into the physical 2D block (im2col layout; depthwise kernels are
+    densified to their block-diagonal form) so PCM programming noise lands
+    on the actual crossbar cells -- including zero cells of the depthwise
+    diagonals, exactly as per-call pcm_infer simulates them.
+    """
+    from repro.core.crossbar import depthwise_densify
+
+    return {
+        spec.name: depthwise_densify if spec.depthwise else conv_weight_as_matrix
+        for spec in cfg.convs
+    }
 
 
 # ---------------------------------------------------------------------------

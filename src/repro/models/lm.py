@@ -18,6 +18,13 @@ when n_layers % period != 0 run unscanned (recurrentgemma: 38 = 12*3 + 2).
 Every projection is an AnalogLinear: the paper's noise-injection + DAC/ADC
 training and PCM inference apply to the full LM family through the same
 AnalogCtx used by the TinyML models.
+
+Analog deployment is program-once / execute-many: ``engine.compile_program``
+walks LMParams (NamedTuple + stacked block pytrees are handled generically),
+applies the PCM chain to every projection a single time, and returns
+programmed params that drop straight into :func:`lm_forward` with the
+program's ``pcm_programmed`` config -- no per-step RNG, no weight-domain
+work inside the decode loop. See launch/serve.py.
 """
 
 from __future__ import annotations

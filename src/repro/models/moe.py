@@ -51,9 +51,17 @@ def moe_init(key: Array, cfg: ModelConfig) -> dict:
 
 
 def _expert_ffn(params: dict, x: Array, ctx: AnalogCtx, dtype) -> Array:
-    """x: (E, G, C, M) -> (E, G, C, M); SwiGLU per expert, analog-mapped."""
+    """x: (E, G, C, M) -> (E, G, C, M); SwiGLU per expert, analog-mapped.
 
-    def one_expert(w1, w3, w2, clip1, clip3, clip2, xe):
+    ``out_scale_buf`` (3, E) carries per-(family, expert) GDC scalars when
+    the expert bank was programmed by ``engine.compile_program``; otherwise
+    the scales are 1 (training / per-call modes ignore them).
+    """
+    scales = params.get("out_scale_buf")
+    if scales is None:
+        scales = jnp.ones((3, params["w1"].shape[0]), jnp.float32)
+
+    def one_expert(w1, w3, w2, clip1, clip3, clip2, s, xe):
         h1 = analog_matmul(
             xe,
             w1.astype(dtype),
@@ -61,6 +69,7 @@ def _expert_ffn(params: dict, x: Array, ctx: AnalogCtx, dtype) -> Array:
             w_min=clip1[0],
             w_max=clip1[1],
             ctx=ctx,
+            out_scale=s[0],
         )
         h3 = analog_matmul(
             xe,
@@ -69,6 +78,7 @@ def _expert_ffn(params: dict, x: Array, ctx: AnalogCtx, dtype) -> Array:
             w_min=clip3[0],
             w_max=clip3[1],
             ctx=ctx,
+            out_scale=s[1],
         )
         h = jax.nn.silu(h1) * h3
         return analog_matmul(
@@ -78,11 +88,13 @@ def _expert_ffn(params: dict, x: Array, ctx: AnalogCtx, dtype) -> Array:
             w_min=clip2[0],
             w_max=clip2[1],
             ctx=ctx,
+            out_scale=s[2],
         )
 
     clip = params["w_clip_buf"]
-    return jax.vmap(one_expert, in_axes=(0, 0, 0, None, None, None, 0))(
-        params["w1"], params["w3"], params["w2"], clip[0], clip[1], clip[2], x
+    return jax.vmap(one_expert, in_axes=(0, 0, 0, None, None, None, 1, 0))(
+        params["w1"], params["w3"], params["w2"],
+        clip[0], clip[1], clip[2], scales, x
     )
 
 

@@ -59,7 +59,7 @@ def moe_apply_shardmap(
     k = cfg.top_k
     e_loc = e // n_model
 
-    def local_moe(x_loc, router_w, w1, w3, w2, r_adc, clip_buf, gain_s):
+    def local_moe(x_loc, router_w, w1, w3, w2, r_adc, clip_buf, scales, gain_s):
         # x_loc: (b_loc, s, m); expert shards w*: (e_loc, ., .)
         # rebuild the analog ctx INSIDE the shard_map body (closing over
         # outer tracers is illegal); decorrelate per-shard noise keys
@@ -95,6 +95,7 @@ def moe_apply_shardmap(
         fake = {
             "w1": w1, "w3": w3, "w2": w2,
             "r_adc": r_adc, "w_clip_buf": clip_buf,
+            "out_scale_buf": scales,  # per-(family, local expert) GDC
         }
         ye = moe_lib._expert_ffn(fake, recv[:, None], ctx_local, x_loc.dtype)[:, 0]
 
@@ -117,6 +118,9 @@ def moe_apply_shardmap(
 
     b_spec = P(data_axes if len(data_axes) != 1 else data_axes[0], None, None)
     e_spec3 = P("model", None, None)
+    scales = params.get("out_scale_buf")
+    if scales is None:
+        scales = jnp.ones((3, e), jnp.float32)
     fn = shard_map(
         local_moe,
         mesh=mesh,
@@ -126,6 +130,7 @@ def moe_apply_shardmap(
             e_spec3, e_spec3, e_spec3,  # expert banks
             P(None),  # r_adc
             P(None, None),  # clip buf
+            P(None, "model"),  # per-(family, expert) GDC scales
             P(),  # gain_s
         ),
         out_specs=b_spec,
@@ -135,5 +140,5 @@ def moe_apply_shardmap(
         x,
         params["router"]["w"],
         params["w1"], params["w3"], params["w2"],
-        params["r_adc"], params["w_clip_buf"], ctx.gain_s,
+        params["r_adc"], params["w_clip_buf"], scales, ctx.gain_s,
     )

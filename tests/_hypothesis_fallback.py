@@ -1,0 +1,137 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite property-tests quantizers, the PCM chain, and the crossbar
+packer with hypothesis strategies. Some environments (minimal CI images,
+hermetic sandboxes) lack the package; importing these modules must not turn
+into a collection error. This shim implements the tiny strategy surface the
+suite uses (integers / floats / booleans / sampled_from / lists / tuples)
+and a ``given`` that expands into a fixed, seeded set of examples via
+``pytest.mark.parametrize`` -- boundary values first, then pseudo-random
+draws. Coverage is thinner than real hypothesis but the tests still run and
+still check every example they are given.
+
+Usage (in test modules):
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+        from hypothesis import given, settings
+    except ImportError:
+        from _hypothesis_fallback import given, hypothesis, settings
+        from _hypothesis_fallback import strategies as st
+"""
+
+from __future__ import annotations
+
+import random
+import types
+
+import pytest
+
+N_EXAMPLES = 5  # per @given; first examples are the strategy's boundaries
+
+
+class _Strategy:
+    def __init__(self, boundaries, draw):
+        self._boundaries = list(boundaries)
+        self._draw = draw
+
+    def example(self, rnd: random.Random, index: int):
+        if index < len(self._boundaries):
+            return self._boundaries[index]
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        [min_value, max_value, (min_value + max_value) // 2],
+        lambda rnd: rnd.randint(min_value, max_value),
+    )
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(
+        [min_value, max_value],
+        lambda rnd: rnd.uniform(min_value, max_value),
+    )
+
+
+def booleans() -> _Strategy:
+    return _Strategy([False, True], lambda rnd: rnd.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(elements, lambda rnd: rnd.choice(elements))
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(
+        [],
+        lambda rnd: tuple(s.example(rnd, N_EXAMPLES) for s in strategies),
+    )
+
+
+def lists(elem: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rnd: random.Random):
+        n = rnd.randint(min_size, max_size)
+        return [elem.example(rnd, N_EXAMPLES) for _ in range(n)]
+
+    boundary = [elem.example(random.Random(0), i) for i in range(min_size)]
+    return _Strategy([boundary] if min_size or boundary else [[]], draw)
+
+
+def given(**strategies: _Strategy):
+    """Expand strategies into a fixed parametrize grid (zipped, not crossed)."""
+    names = list(strategies)
+
+    def deco(fn):
+        rnd = random.Random(1234)
+        cases = [
+            tuple(strategies[n].example(rnd, i) for n in names)
+            for i in range(N_EXAMPLES)
+        ]
+        # de-dup (boundary draws can coincide for tiny domains)
+        seen, unique = set(), []
+        for c in cases:
+            key = repr(c)
+            if key not in seen:
+                seen.add(key)
+                unique.append(c)
+        if len(names) == 1:  # single argname: pytest expects bare values
+            unique = [c[0] for c in unique]
+        return pytest.mark.parametrize(",".join(names), unique)(fn)
+
+    return deco
+
+
+class settings:  # noqa: N801 -- mirrors hypothesis.settings
+    """No-op settings: profiles and example budgets are hypothesis-only."""
+
+    _profiles: dict = {}
+
+    def __init__(self, **_kw):
+        pass
+
+    def __call__(self, fn):
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, *args, **kw):
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name):
+        pass
+
+
+# a module-like object so ``hypothesis.settings.register_profile(...)`` works
+hypothesis = types.SimpleNamespace(settings=settings, given=given)
+strategies = types.SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    booleans=booleans,
+    sampled_from=sampled_from,
+    lists=lists,
+    tuples=tuples,
+)

@@ -1,11 +1,16 @@
 """AnalogLinear / analog_matmul invariants across the three execution modes."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # minimal CI images: run a fixed example grid instead
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.core import AnalogConfig, AnalogCtx, analog_matmul, linear_apply, linear_init
 from repro.core.analog import refresh_clip_ranges

@@ -1,0 +1,297 @@
+"""Program-once / execute-many engine: CiMProgram lifecycle + unified
+execute-path parity (fused kernel vs jnp oracle, including the GDC
+epilogue), and the serving program-once contract."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.analog import (
+    AnalogConfig,
+    AnalogCtx,
+    analog_matmul,
+    linear_apply,
+    linear_init,
+)
+from repro.core.analog import refresh_clip_ranges
+from repro.core.engine import PCM_PROGRAMMED
+from repro.core.quant import QuantSpec
+
+INFER = AnalogConfig().infer(b_adc=8, t_seconds=86400.0)
+
+
+def _layer(d_in=2048, d_out=64, seed=0):
+    return refresh_clip_ranges(linear_init(jax.random.PRNGKey(seed), d_in, d_out))
+
+
+# ------------------------------------------------------------ kernel parity
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 1024, 256), (7, 2048, 130)])
+@pytest.mark.parametrize("out_scale", [1.0, 1.7])
+def test_kernel_matches_oracle_with_gdc_epilogue(m, k, n, out_scale):
+    """The pcm_infer execute path: pre-quantized inputs, GDC out_scale."""
+    from repro.kernels.ops import analog_mvm
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * k**-0.5
+    ra, s = jnp.float32(2.0), jnp.float32(out_scale)
+    y_k = analog_mvm(x, w, r_adc=ra, r_dac=None, out_scale=s, bits=8,
+                     interpret=True)
+    y_r = engine.tile_matmul_quant(
+        x, w, ra, QuantSpec(8, 1.0), 1024, True, None, s
+    )
+    step = 2.0 / 127 * float(s)
+    d = np.abs(np.asarray(y_k) - np.asarray(y_r))
+    assert d.max() <= step * 1.01 * (-(-k // 1024))
+
+
+def test_execute_mvm_kernel_plan_matches_reference_plan():
+    """One execute entry, two backends: plan-selected kernel == jnp ref."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 2048), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (2048, 128), jnp.float32) * 0.02
+    ra, s = jnp.float32(1.5), jnp.float32(1.3)
+    cfg_ref = INFER
+    cfg_ker = dataclasses.replace(INFER, use_kernel=True, interpret=True)
+    plan_ref = engine.plan_for(cfg_ref, 2048, 128)
+    plan_ker = engine.plan_for(cfg_ker, 2048, 128)
+    assert not plan_ref.use_kernel and plan_ker.use_kernel
+    assert plan_ker.n_row_tiles == 2 and plan_ker.n_col_strips == 1
+    y_r = engine.execute_mvm(x, w, ra, plan_ref, out_scale=s)
+    y_k = engine.execute_mvm(x, w, ra, plan_ker, out_scale=s)
+    step = 1.5 / 127 * 1.3
+    assert np.abs(np.asarray(y_k) - np.asarray(y_r)).max() <= 2.01 * step
+
+
+# ------------------------------------------------------- program lifecycle
+
+
+def test_program_once_execute_twice_bit_exact():
+    p = _layer()
+    params = {"lin": p}
+    prog = engine.compile_program(params, INFER, jax.random.PRNGKey(7))
+    assert prog.cfg.mode == PCM_PROGRAMMED
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 2048))
+    y1 = linear_apply(prog.params["lin"], x, AnalogCtx(cfg=prog.cfg, gain_s=jnp.ones(())))
+    y2 = linear_apply(prog.params["lin"], x, AnalogCtx(cfg=prog.cfg, gain_s=jnp.ones(())))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_drift_to_changes_only_drift_not_programming():
+    prog = engine.compile_program(
+        {"lin": _layer()}, dataclasses.replace(INFER, t_seconds=25.0),
+        jax.random.PRNGKey(7),
+    )
+    aged = prog.drift_to(365 * 86400.0)
+    # device programming state is untouched (same chip, later time)
+    np.testing.assert_array_equal(
+        np.asarray(prog.state["lin"]["g_pos"]),
+        np.asarray(aged.state["lin"]["g_pos"]),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(prog.state["lin"]["g_neg"]),
+        np.asarray(aged.state["lin"]["g_neg"]),
+    )
+    # but the effective weights and GDC scalar move with drift
+    assert not np.array_equal(
+        np.asarray(prog.params["lin"]["w"]), np.asarray(aged.params["lin"]["w"])
+    )
+    assert float(aged.params["lin"]["out_scale_buf"]) > float(
+        prog.params["lin"]["out_scale_buf"]
+    )
+    # drift_to the original time reproduces the original program bit-exactly
+    back = aged.drift_to(25.0)
+    np.testing.assert_array_equal(
+        np.asarray(prog.params["lin"]["w"]), np.asarray(back.params["lin"]["w"])
+    )
+
+
+def test_programmed_matches_percall_statistics():
+    """Programmed execution is one draw of the per-call noise distribution:
+    relative errors vs the digital output must be of comparable size."""
+    p = _layer(d_in=512, d_out=64)
+    p = dict(p, r_adc=jnp.float32(6.0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 512))
+    y0 = linear_apply(p, x, AnalogCtx(cfg=AnalogConfig(), gain_s=jnp.ones(())))
+
+    def rel(y):
+        return float(jnp.linalg.norm(y - y0) / jnp.linalg.norm(y0))
+
+    pc, pr = [], []
+    for d in range(4):
+        ctx = AnalogCtx(cfg=INFER, gain_s=jnp.ones(()), key=jax.random.PRNGKey(d))
+        pc.append(rel(linear_apply(p, x, ctx)))
+        prog = engine.compile_program({"l": p}, INFER, jax.random.PRNGKey(50 + d))
+        pr.append(
+            rel(linear_apply(prog.params["l"], x, AnalogCtx(cfg=prog.cfg, gain_s=jnp.ones(()))))
+        )
+    assert 0.3 < np.mean(pr) / np.mean(pc) < 3.0, (pc, pr)
+
+
+def test_stacked_layers_programmed_per_member():
+    """Scanned LM blocks: each stack member is an independent chip region
+    (own write noise, own weight scale, own GDC scalar)."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 256, 32))
+    w = w * jnp.array([0.02, 0.2, 1.0])[:, None, None]
+    tree = {
+        "w": w,
+        "w_clip_buf": jnp.tile(jnp.array([-2.0, 2.0]), (3, 1)),
+        "r_adc": jnp.ones((3,)),
+    }
+    prog = engine.compile_program({"blk": tree}, INFER, jax.random.PRNGKey(1))
+    st = prog.state["blk"]
+    assert st["w_scale"].shape == (3,)
+    assert prog.params["blk"]["out_scale_buf"].shape == (3,)
+    # per-member weight scales follow the member magnitudes
+    assert float(st["w_scale"][0]) < float(st["w_scale"][1]) < float(st["w_scale"][2])
+
+
+def test_moe_expert_bank_programmed():
+    e, m, h = 4, 64, 96
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    bank = {
+        "w1": jax.random.normal(keys[0], (e, m, h)) * 0.1,
+        "w3": jax.random.normal(keys[1], (e, m, h)) * 0.1,
+        "w2": jax.random.normal(keys[2], (e, h, m)) * 0.1,
+        "r_adc": jnp.ones((3,)),
+        "w_clip_buf": jnp.tile(jnp.array([-1.0, 1.0]), (3, 1)),
+    }
+    prog = engine.compile_program({"moe": bank}, INFER, jax.random.PRNGKey(3))
+    node = prog.params["moe"]
+    assert node["out_scale_buf"].shape == (3, e)
+    assert node["w1"].shape == (e, m, h)
+    # programmed weights differ across experts even for identical targets
+    assert not np.array_equal(np.asarray(node["w1"][0]), np.asarray(node["w1"][1]))
+
+
+def test_moe_shared_expert_and_router_handled():
+    """The MoE dict nests a shared-expert (analog linears) and a digital
+    router next to the expert bank: the bank match must not swallow them."""
+    from repro.models.common import ModelConfig
+    from repro.models.moe import moe_init
+
+    cfg = ModelConfig(
+        name="t", family="moe", n_layers=2, n_experts=4, top_k=1,
+        shared_expert=True,
+    ).smoke()
+    bank = moe_init(jax.random.PRNGKey(0), cfg)
+    prog = engine.compile_program({"moe": bank}, INFER, jax.random.PRNGKey(1))
+    node = prog.params["moe"]
+    # shared expert linears were programmed (weights changed, GDC attached)
+    for fam in ("w1", "w3", "w2"):
+        assert "out_scale_buf" in node["shared"][fam]
+        assert not np.array_equal(
+            np.asarray(node["shared"][fam]["w"]),
+            np.asarray(bank["shared"][fam]["w"]),
+        )
+        assert f"moe/shared/{fam}" in prog.plans
+    # the digital router is untouched
+    np.testing.assert_array_equal(
+        np.asarray(node["router"]["w"]), np.asarray(bank["router"]["w"])
+    )
+    # drift_to keeps walking the shared expert too
+    aged = prog.drift_to(365 * 86400.0)
+    assert not np.array_equal(
+        np.asarray(aged.params["moe"]["shared"]["w1"]["w"]),
+        np.asarray(node["shared"]["w1"]["w"]),
+    )
+
+
+def test_serving_decode_loop_programs_zero_times():
+    """The acceptance contract: after compile_program, an entire prefill +
+    decode loop (including its first traced step) adds no programming
+    events; the legacy per-call path adds one per layer per trace."""
+    from repro.models import ModelConfig, init_lm_cache, lm_forward, lm_init
+    from repro.models.lm import unstack_cache
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2).smoke()
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    prog = engine.compile_program(params, INFER, jax.random.PRNGKey(1))
+
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, cfg.vocab)
+    cache = init_lm_cache(cfg, 2, 16, jnp.float32)
+    before = engine.program_event_count()
+    _, cache = lm_forward(
+        prog.params, {"tokens": toks}, prog.cfg, cfg, cache=cache,
+        last_token_only=True,
+    )
+    cache = unstack_cache(cache)
+    for t in range(3):
+        _, cache = lm_forward(
+            prog.params, {"tokens": toks[:, t : t + 1]}, prog.cfg, cfg,
+            cache=cache,
+        )
+    assert engine.program_event_count() == before, "serving reprogrammed PCM"
+
+    # the legacy per-call path DOES reprogram (at least once per trace)
+    _ = lm_forward(
+        params, {"tokens": toks}, INFER, cfg, rng=jax.random.PRNGKey(3)
+    )
+    assert engine.program_event_count() > before
+
+
+def test_programmed_cnn_conv_weights_are_2d_blocks():
+    from benchmarks.common import KWS_BENCH_DW
+    from repro.models.analognet import cnn_apply, cnn_init, crossbar_transforms
+
+    cfg = KWS_BENCH_DW
+    params = cnn_init(jax.random.PRNGKey(0), cfg)
+    prog = engine.compile_program(
+        params, INFER, jax.random.PRNGKey(1),
+        transforms=crossbar_transforms(cfg), with_mapping=True,
+    )
+    for spec in cfg.convs:
+        w = prog.params[spec.name]["w"]
+        assert w.ndim == 2  # physical crossbar block, programmed once
+        if spec.depthwise:
+            assert w.shape == (spec.kh * spec.kw * spec.c_in, spec.c_in)
+    x = jax.random.normal(
+        jax.random.PRNGKey(2), (2,) + cfg.input_hw + (cfg.in_channels,)
+    )
+    y1 = cnn_apply(prog.params, x, prog.cfg, cfg)
+    y2 = cnn_apply(prog.params, x, prog.cfg, cfg)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert prog.mapping is not None and prog.mapping.n_arrays >= 1
+
+
+def test_untransformed_conv_kernel_rejected():
+    """A 4D conv kernel without its im2col/densify transform must fail
+    loudly at program time, not mis-program spatial dims as stacked layers."""
+    from repro.models.analognet import analognet_kws_config, cnn_init
+
+    cfg = analognet_kws_config()
+    params = cnn_init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="transforms"):
+        engine.compile_program(params, INFER, jax.random.PRNGKey(1))
+
+
+def test_plan_for_geometry():
+    plan = engine.plan_for(INFER, 4096, 1200)
+    assert plan.n_row_tiles == 4  # 4096 / 1024 source lines
+    assert plan.n_col_strips == 3  # ceil(1200 / 512) bitline strips
+    assert plan.spec.b_adc == 8 and plan.spec.b_dac == 9
+
+
+# --------------------------------------------------- crossbar multi-array
+
+
+def test_occupancy_grid_multi_array():
+    from repro.core.crossbar import LayerShape, map_layers, occupancy_grid
+
+    # three near-full-array layers cannot share one 1024x512 array
+    shapes = [LayerShape(f"l{i}", 1000, 500, 1) for i in range(3)]
+    m = map_layers(shapes, 1024, 512)
+    assert m.n_arrays == 3
+    total = 0
+    for a in range(m.n_arrays):
+        grid = occupancy_grid(m, a)
+        assert grid.max() == 1  # no overlap within any array
+        total += int(grid.sum())
+    assert total == m.cells_used
+    with pytest.raises(ValueError):
+        occupancy_grid(m, m.n_arrays)

@@ -1,12 +1,17 @@
 """Property tests for the DAC/ADC quantizers and the shared-gain constraint."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # minimal CI images: run a fixed example grid instead
+    from _hypothesis_fallback import given, hypothesis, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.core import quant
 
