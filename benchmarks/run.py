@@ -2,20 +2,36 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Default budgets are reduced
 (CPU-feasible); ``--full`` runs the complete protocol. ``--only <prefix>``
-filters benchmarks.
+filters benchmarks. ``--json PATH`` additionally writes the rows as a JSON
+document (with commit/timestamp metadata when available) -- the nightly CI
+workflow uploads it as an artifact so the perf trajectory is recorded
+per-commit.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+
+def _row_to_record(row: str) -> dict:
+    name, us, derived = (row.split(",", 2) + ["", ""])[:3]
+    try:
+        us_f = float(us)
+    except ValueError:
+        us_f = None
+    return {"name": name, "us_per_call": us_f, "derived": derived}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (for CI artifacts)")
     args = ap.parse_args()
     fast = not args.full
 
@@ -42,6 +58,7 @@ def main() -> None:
         ("fig9_micronet", fig9_micronet.run),
         ("appxC_heuristic", appxC_heuristic.run),
     ]
+    records: list[dict] = []
     print("name,us_per_call,derived")
     for name, fn in suites:
         if args.only and not name.startswith(args.only):
@@ -51,9 +68,26 @@ def main() -> None:
             for row in fn(fast=fast):
                 print(row)
                 sys.stdout.flush()
+                records.append(_row_to_record(row))
         except Exception as e:  # keep the suite running
-            print(f"{name}_ERROR,0,{type(e).__name__}:{e}")
-        print(f"{name}_suite_wall,{(time.time()-t0)*1e6:.0f},")
+            row = f"{name}_ERROR,0,{type(e).__name__}:{e}"
+            print(row)
+            records.append(_row_to_record(row))
+        wall = f"{name}_suite_wall,{(time.time()-t0)*1e6:.0f},"
+        print(wall)
+        records.append(_row_to_record(wall))
+
+    if args.json:
+        doc = {
+            "commit": os.environ.get("GITHUB_SHA"),
+            "ref": os.environ.get("GITHUB_REF"),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "full": args.full,
+            "rows": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {len(records)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

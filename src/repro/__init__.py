@@ -8,3 +8,12 @@ the 256/512-chip production meshes. See DESIGN.md / EXPERIMENTS.md.
 """
 
 __version__ = "1.0.0"
+
+import jax as _jax
+
+# Sharding-invariant RNG: with the legacy (non-partitionable) threefry
+# lowering, the *values* drawn under jit can depend on the output sharding
+# (observed on 2D meshes with a sharded leading dim). A programmed CiM chip
+# must be the same chip no matter which mesh programmed it, so the whole
+# framework runs with the partitionable lowering (the default in newer JAX).
+_jax.config.update("jax_threefry_partitionable", True)

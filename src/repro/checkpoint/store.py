@@ -26,6 +26,7 @@ Design points for 1000+-node operation:
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import queue
@@ -157,6 +158,244 @@ def gc_old(ckpt_dir: str, keep: int = 3) -> None:
     )
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))
+
+
+# ---------------------------------------------------------------------------
+# Programmed-chip artifacts (CiMProgram serialization)
+#
+# A programmed analog chip is a deployable artifact: the write noise frozen
+# into the devices at program time IS the chip, so a serving fleet must load
+# one saved draw instead of re-deriving a new chip per host. Layout
+# (versioned; see ROADMAP "programmed-chip artifact format"):
+#
+#     program_dir/
+#       arrays.npz   # flat params (effective weights + GDC scalars + the
+#                    # digital leaves) and PCM state (conductance pairs,
+#                    # read-noise Q factors, per-member weight scales,
+#                    # det-summed GDC numerators, layer RNG keys)
+#       meta.json    # format tag, version, drift timestamp t_seconds,
+#                    # AnalogConfig (incl. PCMConfig), per-layer quant plans
+#                    # as (K, N), optional physical-array mapping
+#       COMMIT       # written last: presence marks a complete artifact
+#
+# Restore rebuilds the execution plans from (cfg, K, N) -- plans are pure
+# geometry -- and ``drift_to`` on the loaded program is bit-identical to
+# drifting the original in-memory program (same state, same jitted update).
+# ---------------------------------------------------------------------------
+
+PROGRAM_FORMAT = "cim-program"
+PROGRAM_VERSION = 1
+
+
+def save_program(path: str, program, *, extra_meta: Optional[dict] = None) -> str:
+    """Atomically persist a compiled CiMProgram. Returns the final path.
+
+    Sharded programs are gathered to host for the write (np.asarray); the
+    artifact itself is layout-free and can be reloaded onto any mesh.
+    """
+    from repro.core import crossbar as crossbar_lib
+
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {
+        **{f"params{_SEP}{k}": v for k, v in _flatten(program.params).items()},
+        **{f"state{_SEP}{k}": v for k, v in _flatten(program.state).items()},
+    }
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {
+        "format": PROGRAM_FORMAT,
+        "version": PROGRAM_VERSION,
+        "t_seconds": program.t_seconds,
+        "cfg": dataclasses.asdict(program.cfg),
+        "plans": {p: [plan.k, plan.n] for p, plan in program.plans.items()},
+        "mapping": (
+            crossbar_lib.mapping_to_dict(program.mapping)
+            if program.mapping is not None
+            else None
+        ),
+        **(extra_meta or {}),
+    }
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write("ok")
+    # overwrite without a window where no committed artifact exists: move
+    # the old artifact aside, swing the new one into place, then drop it
+    old = path + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(path):
+        os.replace(path, old)
+    os.replace(tmp, path)
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    return path
+
+
+def _nest(flat: dict[str, np.ndarray]) -> dict:
+    """Rebuild nested dicts from '::'-joined flat keys."""
+    out: dict = {}
+    for key, arr in flat.items():
+        node = out
+        parts = key.split(_SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return out
+
+
+def _cast_like(template: Any, loaded: Any) -> Any:
+    """Rebuild ``loaded`` (nested dicts from :func:`_nest`) in the container
+    types of ``template`` (NamedTuples, lists, tuples).
+
+    Keys present only in ``loaded`` (e.g. ``out_scale_buf`` added by the
+    program phase) are kept; template subtrees with no stored leaves (empty
+    containers) fall back to the template value. Leaf shapes may differ from
+    the template (programmed conv weights come back as 2D crossbar blocks).
+    """
+    import jax.numpy as jnp
+
+    if not isinstance(loaded, dict):
+        return jnp.asarray(loaded)
+    if hasattr(template, "_fields"):  # NamedTuple
+        return type(template)(
+            *(
+                _cast_like(getattr(template, f), loaded[f])
+                if f in loaded
+                else getattr(template, f)
+                for f in template._fields
+            )
+        )
+    if isinstance(template, (list, tuple)):
+        out = [
+            _cast_like(template[i], loaded[str(i)])
+            if str(i) in loaded
+            else template[i]
+            for i in range(len(template))
+        ]
+        return type(template)(out) if isinstance(template, tuple) else out
+    if isinstance(template, dict):
+        merged = {k: _cast_like(template.get(k), v) for k, v in loaded.items()}
+        for k, v in template.items():
+            if k not in merged:
+                merged[k] = v
+        return merged
+    # no template guidance (extra subtree): plain nested dicts
+    return {k: _cast_like(None, v) for k, v in loaded.items()}
+
+
+def _place_by_path(params: Any, shardings: Any) -> Any:
+    """Place a loaded param tree by *path* lookup against a shardings tree.
+
+    The loaded tree carries program-phase extras (``out_scale_buf``) and
+    possibly reshaped conv blocks that a shardings tree built for the
+    pre-programming params does not know about -- leaves with no matching
+    (rank-compatible) sharding replicate on the same mesh.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.core import engine as engine_lib
+
+    lookup = engine_lib.sharding_lookup(shardings)
+    if not lookup:
+        return jax.device_put(params, shardings)
+    rep = NamedSharding(next(iter(lookup.values())).mesh, PartitionSpec())
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(_path_part(x) for x in p)
+        sh = lookup.get(key, rep)
+        if len(sh.spec) > getattr(leaf, "ndim", 0):
+            sh = rep  # shape changed by a program transform: replicate
+        leaves.append(jax.device_put(leaf, sh))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_program(path: str, params_like: Any = None, *, shardings: Any = None):
+    """Load a CiMProgram artifact saved by :func:`save_program`.
+
+    ``params_like``: a param tree with the source model's container types
+    (e.g. from ``lm_init``) so NamedTuple/list structure is restored; plain
+    dict models (CNNs) need no template. ``shardings``: optional pytree of
+    NamedShardings to place the loaded *params* on a serving mesh --
+    matched to the loaded tree by path, so a tree built for the
+    pre-programming params works (the program-phase extras, e.g.
+    ``out_scale_buf``, replicate).
+    """
+    from repro.core import crossbar as crossbar_lib
+    from repro.core import engine as engine_lib
+    from repro.core import pcm as pcm_lib
+    from repro.core.analog import AnalogConfig
+
+    if not os.path.exists(os.path.join(path, "COMMIT")):
+        raise FileNotFoundError(f"no committed program artifact at {path}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if meta.get("format") != PROGRAM_FORMAT:
+        raise ValueError(f"not a {PROGRAM_FORMAT} artifact: {path}")
+    if meta.get("version", 0) > PROGRAM_VERSION:
+        raise ValueError(
+            f"program artifact version {meta['version']} is newer than "
+            f"supported version {PROGRAM_VERSION}"
+        )
+
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_params = {}
+    flat_state = {}
+    for k in data.files:
+        head, rest = k.split(_SEP, 1)
+        (flat_params if head == "params" else flat_state)[rest] = data[k]
+
+    cfg_d = dict(meta["cfg"])
+    cfg = AnalogConfig(
+        **{**cfg_d, "pcm": pcm_lib.PCMConfig(**cfg_d["pcm"])}
+    )
+    if params_like is not None:
+        # the artifact must cover the template: a leaf absent from the
+        # artifact would silently keep the template's freshly-initialized
+        # value in _cast_like (a chimera of stored and random weights), and
+        # a same-rank shape mismatch means a different architecture/config
+        # (scanned stacks put the layer count in the leaf shape). A *rank*
+        # change is legitimate: program transforms flatten conv kernels to
+        # 2D crossbar blocks.
+        template = _flatten(params_like)
+        missing = sorted(set(template) - set(flat_params))
+        wrong_shape = sorted(
+            k for k, v in template.items()
+            if k in flat_params
+            and flat_params[k].ndim == v.ndim
+            and flat_params[k].shape != v.shape
+        )
+        if missing or wrong_shape:
+            raise ValueError(
+                f"program artifact at {path} does not match the model: "
+                f"{len(missing)} template leaves absent "
+                f"(first few: {missing[:3]}), {len(wrong_shape)} with "
+                f"mismatched shapes (first few: "
+                f"{[(k, flat_params[k].shape, template[k].shape) for k in wrong_shape[:3]]}) "
+                "-- was it saved from a different architecture/config?"
+            )
+    params = _cast_like(params_like, _nest(flat_params))
+    state = jax.tree.map(jax.numpy.asarray, _nest(flat_state))
+    plans = {
+        p: engine_lib.plan_for(cfg, k, n)
+        for p, (k, n) in meta["plans"].items()
+    }
+    mapping = (
+        crossbar_lib.mapping_from_dict(meta["mapping"])
+        if meta.get("mapping")
+        else None
+    )
+    if shardings is not None:
+        params = _place_by_path(params, shardings)
+    return engine_lib.CiMProgram(
+        params=params,
+        cfg=cfg,
+        t_seconds=float(meta["t_seconds"]),
+        state=state,
+        plans=plans,
+        mapping=mapping,
+    )
 
 
 class AsyncCheckpointer:

@@ -232,6 +232,44 @@ def map_layers(
     return Mapping(array_rows, array_cols, placements, max(len(arrays), 1))
 
 
+def mapping_to_dict(mapping: Mapping) -> dict:
+    """JSON-serializable form of a Mapping (program-artifact metadata)."""
+    return {
+        "array_rows": mapping.array_rows,
+        "array_cols": mapping.array_cols,
+        "n_arrays": mapping.n_arrays,
+        "placements": [
+            {
+                "layer": dataclasses.asdict(p.layer),
+                "row0": p.row0,
+                "col0": p.col0,
+                "rows": p.rows,
+                "cols": p.cols,
+                "row_tile_of_layer": p.row_tile_of_layer,
+                "array_index": p.array_index,
+            }
+            for p in mapping.placements
+        ],
+    }
+
+
+def mapping_from_dict(d: dict) -> Mapping:
+    """Inverse of :func:`mapping_to_dict` (placements round-trip exactly)."""
+    placements = [
+        Placement(
+            layer=LayerShape(**p["layer"]),
+            row0=p["row0"],
+            col0=p["col0"],
+            rows=p["rows"],
+            cols=p["cols"],
+            row_tile_of_layer=p["row_tile_of_layer"],
+            array_index=p["array_index"],
+        )
+        for p in d["placements"]
+    ]
+    return Mapping(d["array_rows"], d["array_cols"], placements, d["n_arrays"])
+
+
 def occupancy_grid(mapping: Mapping, array_index: int = 0) -> np.ndarray:
     """Dense 0/1 grid of claimed cells for visual/debug inspection (Fig. 6).
 

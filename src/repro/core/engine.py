@@ -40,6 +40,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import pcm as pcm_lib
 from repro.core import quant as quant_lib
@@ -232,7 +233,9 @@ def _program_2d(key: Array, w: Array, w_min, w_max, cfg: pcm_lib.PCMConfig):
         "g_neg": pcm_lib.program(k_pn, g_neg_t, cfg),
         "q_pos": pcm_lib.read_noise_q(g_pos_t),
         "q_neg": pcm_lib.read_noise_q(g_neg_t),
-        "gt_sum": jnp.sum(g_pos_t + g_neg_t),
+        # det_sum: bit-identical under any sharding -- a chip programmed
+        # under pjit is the same chip a single host would have programmed.
+        "gt_sum": pcm_lib.det_sum(g_pos_t + g_neg_t),
         "w_scale": w_scale,
         "key": key,
     }
@@ -254,7 +257,9 @@ def _drift_read_2d(state: dict, t: Array, cfg: pcm_lib.PCMConfig):
         g_pos = g_pos * pcm_lib.drift_factor(nu_p, t)
         g_neg = g_neg * pcm_lib.drift_factor(nu_n, t)
     if cfg.gdc:
-        gdc = state["gt_sum"] / (jnp.sum(g_pos + g_neg) + 1e-12)
+        # det_sum keeps the GDC scalar bit-identical across mesh shapes, so
+        # every replica of a serving fleet applies the same digital factor.
+        gdc = state["gt_sum"] / (pcm_lib.det_sum(g_pos + g_neg) + 1e-12)
     else:
         gdc = jnp.ones((), jnp.float32)
     if cfg.read_noise:
@@ -282,6 +287,92 @@ def _stacked(fn: Callable, n_stack_dims: int) -> Callable:
     return fn
 
 
+# ---------------------------------------------------------------------------
+# Jitted program/drift cores (sharding-aware, bit-stable)
+#
+# Both phases run through cached jit wrappers so the numerics are pinned to
+# ONE compiled computation per (pcm config, stack depth, sharding): the
+# program path and every later drift_to of the same chip hit the same code,
+# which together with det_sum and the sharding-invariant RNG makes a chip
+# programmed on an N-device mesh bit-identical to the host-programmed chip.
+# ---------------------------------------------------------------------------
+
+
+def _full_spec(sharding: NamedSharding, ndim: int) -> tuple:
+    """Pad a (possibly prefix) PartitionSpec to full rank."""
+    spec = tuple(sharding.spec) + (None,) * (ndim - len(sharding.spec))
+    return spec
+
+
+def state_shardings(
+    w_sharding: NamedSharding, n_stack_dims: int
+) -> dict[str, NamedSharding]:
+    """Shardings for a programmed-layer state, inherited from the weight.
+
+    The conductance pairs and Q factors are elementwise images of the weight
+    block, so they carry the weight's spec verbatim; the per-stack-member
+    scalars (``gt_sum``, ``w_scale``) keep only the stack part of the spec,
+    and the per-member RNG keys get a trailing unsharded key axis.
+    """
+    mesh = w_sharding.mesh
+    spec = _full_spec(w_sharding, n_stack_dims + 2)
+    full = NamedSharding(mesh, PartitionSpec(*spec))
+    stack = NamedSharding(mesh, PartitionSpec(*spec[:n_stack_dims]))
+    key_sh = NamedSharding(
+        mesh, PartitionSpec(*spec[:n_stack_dims], None)
+    )
+    return {
+        "g_pos": full,
+        "g_neg": full,
+        "q_pos": full,
+        "q_neg": full,
+        "gt_sum": stack,
+        "w_scale": stack,
+        "key": key_sh,
+    }
+
+
+@functools.lru_cache(maxsize=512)
+def _jitted_program(
+    cfg: pcm_lib.PCMConfig,
+    n_stack_dims: int,
+    w_sharding: Optional[NamedSharding],
+):
+    fn = _stacked(
+        lambda k_, w_, lo, hi: _program_2d(k_, w_, lo, hi, cfg),
+        n_stack_dims,
+    )
+    if w_sharding is None:
+        return jax.jit(fn)
+    return jax.jit(
+        fn, out_shardings=state_shardings(w_sharding, n_stack_dims)
+    )
+
+
+@functools.lru_cache(maxsize=512)
+def _jitted_drift(
+    cfg: pcm_lib.PCMConfig,
+    n_stack_dims: int,
+    w_sharding: Optional[NamedSharding],
+):
+    def fn(state, t):
+        return _stacked(lambda s: _drift_read_2d(s, t, cfg), n_stack_dims)(
+            state
+        )
+
+    if w_sharding is None:
+        return jax.jit(fn)
+    mesh = w_sharding.mesh
+    spec = _full_spec(w_sharding, n_stack_dims + 2)
+    return jax.jit(
+        fn,
+        out_shardings=(
+            NamedSharding(mesh, PartitionSpec(*spec)),
+            NamedSharding(mesh, PartitionSpec(*spec[:n_stack_dims])),
+        ),
+    )
+
+
 def program_weight(
     key: Array,
     w: Array,
@@ -289,6 +380,8 @@ def program_weight(
     w_max: Array,
     t_seconds,
     cfg: pcm_lib.PCMConfig,
+    *,
+    sharding: Optional[NamedSharding] = None,
 ):
     """Program a (stack..., K, N) weight tensor once; evaluate at t_seconds.
 
@@ -296,30 +389,49 @@ def program_weight(
     independent layers (scanned LM groups, MoE expert banks): each stack
     member gets its own write-noise draw, weight scale, and GDC scalar.
     Returns (w_eff, out_scale, state).
+
+    With ``sharding`` (the weight's NamedSharding) the PCM state is created
+    under jit with shardings inherited from the weight -- no host-side
+    materialization -- and is bit-identical to the host-programmed state.
     """
     record_program_event()
     stack = w.shape[:-2]
-    t = jnp.asarray(t_seconds, jnp.float32)
     w_min_b = jnp.broadcast_to(jnp.asarray(w_min, jnp.float32), stack)
     w_max_b = jnp.broadcast_to(jnp.asarray(w_max, jnp.float32), stack)
     n_members = math.prod(stack) if stack else 1
     keys = jax.random.split(key, n_members).reshape(stack + (-1,))
 
-    prog = _stacked(
-        lambda k_, w_, lo, hi: _program_2d(k_, w_, lo, hi, cfg), len(stack)
+    state = _jitted_program(cfg, len(stack), sharding)(
+        keys, w, w_min_b, w_max_b
     )
-    state = prog(keys, w, w_min_b, w_max_b)
-    w_eff, out_scale = drift_state(state, t, cfg, n_stack_dims=len(stack))
+    w_eff, out_scale = drift_state(
+        state, t_seconds, cfg, n_stack_dims=len(stack), sharding=sharding
+    )
     return w_eff, out_scale, state
 
 
 def drift_state(
-    state: dict, t_seconds, cfg: pcm_lib.PCMConfig, *, n_stack_dims: int
+    state: dict,
+    t_seconds,
+    cfg: pcm_lib.PCMConfig,
+    *,
+    n_stack_dims: int,
+    sharding: Optional[NamedSharding] = None,
 ):
-    """(w_eff, out_scale) of a programmed state re-evaluated at t_seconds."""
+    """(w_eff, out_scale) of a programmed state re-evaluated at t_seconds.
+
+    Runs as a jitted, sharding-preserving update: the conductances stay
+    sharded on whatever mesh holds them (``sharding`` pins the effective
+    weights back to the serving layout) and never gather to host.
+    """
     t = jnp.asarray(t_seconds, jnp.float32)
-    fn = _stacked(lambda s: _drift_read_2d(s, t, cfg), n_stack_dims)
-    return fn(state)
+    return _jitted_drift(cfg, n_stack_dims, sharding)(state, t)
+
+
+def _layer_sharding(leaf) -> Optional[NamedSharding]:
+    """The NamedSharding committed on an array, if any."""
+    sh = getattr(leaf, "sharding", None)
+    return sh if isinstance(sh, NamedSharding) else None
 
 
 # ---------------------------------------------------------------------------
@@ -422,6 +534,9 @@ class CiMProgram:
 
         Only drift and read noise change; programming noise (and therefore
         the underlying device state) is identical to the original program.
+        The per-layer update runs jitted and sharding-preserving: a sharded
+        program advances chip time without gathering conductances to host
+        (effective weights land back on each weight's serving sharding).
         """
         pcm_cfg = self.cfg.pcm
 
@@ -431,7 +546,8 @@ class CiMProgram:
             if "w" in node:
                 w_eff, gdc = drift_state(
                     st, t_seconds, pcm_cfg,
-                    n_stack_dims=node["w"].ndim - 2,
+                    n_stack_dims=st["g_pos"].ndim - 2,
+                    sharding=_layer_sharding(node["w"]),
                 )
                 new["w"] = w_eff.astype(node["w"].dtype)
                 new["out_scale_buf"] = gdc
@@ -440,7 +556,8 @@ class CiMProgram:
                 for fam in _MOE_FAMILIES:
                     w_eff, gdc = drift_state(
                         st[fam], t_seconds, pcm_cfg,
-                        n_stack_dims=node[fam].ndim - 2,
+                        n_stack_dims=st[fam]["g_pos"].ndim - 2,
+                        sharding=_layer_sharding(node[fam]),
                     )
                     new[fam] = w_eff.astype(node[fam].dtype)
                     scales.append(gdc)
@@ -454,6 +571,32 @@ class CiMProgram:
         )
 
 
+def sharding_lookup(shardings: Any) -> dict[str, NamedSharding]:
+    """Flatten a shardings pytree into a path -> NamedSharding dict.
+
+    Paths use the same '/'-joined syntax as the :func:`_walk` param walk
+    (dict keys, NamedTuple field names, sequence indices), so a tree built
+    by ``launch.sharding.param_shardings`` lines up with the program walk.
+    """
+    if shardings is None:
+        return {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(shardings)
+    out: dict[str, NamedSharding] = {}
+    for path, leaf in flat:
+        if not isinstance(leaf, NamedSharding):
+            continue
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+        out["/".join(parts)] = leaf
+    return out
+
+
 def compile_program(
     params: Any,
     cfg: Any,
@@ -462,6 +605,7 @@ def compile_program(
     t_seconds: Optional[float] = None,
     transforms: Optional[dict[str, Callable[[Array], Array]]] = None,
     with_mapping: bool = False,
+    shardings: Any = None,
 ) -> CiMProgram:
     """Program phase: walk ``params`` once and build a :class:`CiMProgram`.
 
@@ -479,9 +623,19 @@ def compile_program(
     ``with_mapping=True`` additionally shelf-packs every programmed block
     through the layer-serial tiler, attaching the physical array Mapping
     (placements + utilization) to the program.
+
+    ``shardings``: a pytree of NamedShardings matching ``params`` (e.g.
+    from ``launch.sharding.param_shardings(..., inference=True)``). Each
+    layer's PCM state is then created under jit with shardings inherited
+    from its weight, instead of a host-side materialization. When omitted,
+    weights already committed with a NamedSharding (params placed on a mesh
+    by the caller) inherit their own shardings automatically. The chip is
+    bit-identical either way (det_sum + sharding-invariant RNG); layers
+    with a ``transforms`` entry change shape and are programmed host-side.
     """
     t = float(cfg.t_seconds if t_seconds is None else t_seconds)
     transforms = transforms or {}
+    shard_of = sharding_lookup(shardings)
     state: dict[str, Any] = {}
     plans: dict[str, ExecutionPlan] = {}
     shapes: list[LayerShape] = []
@@ -499,6 +653,13 @@ def compile_program(
                 LayerShape(f"{path}[{i}]" if count > 1 else path,
                            k_dim, n_dim, n_patches=1)
             )
+
+    def layer_sharding(
+        layer_path: str, leaf_path: str, leaf: Array
+    ) -> Optional[NamedSharding]:
+        if layer_path in transforms:
+            return None  # shape changed by the transform; program host-side
+        return shard_of.get(leaf_path) or _layer_sharding(leaf)
 
     def program_node(path: str, node: dict) -> dict:
         new = dict(node)
@@ -519,7 +680,8 @@ def compile_program(
             buf = node["w_clip_buf"]
             w_min, w_max = buf[..., 0], buf[..., 1]
             w_eff, gdc, st = program_weight(
-                next_key(), w2d, w_min, w_max, t, cfg.pcm
+                next_key(), w2d, w_min, w_max, t, cfg.pcm,
+                sharding=layer_sharding(path, f"{path}/w", node["w"]),
             )
             new["w"] = w_eff.astype(node["w"].dtype)
             new["out_scale_buf"] = gdc
@@ -541,7 +703,8 @@ def compile_program(
                     stack,
                 )
                 w_eff, gdc, st = program_weight(
-                    next_key(), w, w_min, w_max, t, cfg.pcm
+                    next_key(), w, w_min, w_max, t, cfg.pcm,
+                    sharding=layer_sharding(path, f"{path}/{fam}", w),
                 )
                 new[fam] = w_eff.astype(w.dtype)
                 st_fams[fam] = st

@@ -23,3 +23,19 @@ def make_host_mesh(model: int = 2):
     n = len(jax.devices())
     model = min(model, n)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_serving_mesh(model: int | None = None):
+    """Mesh over all local devices for sharded serving / chip programming.
+
+    ``model`` sets the tensor-parallel degree (default: every device on the
+    ``model`` axis -- serving replicates over ``data`` only when more
+    devices than TP degree are available). Serving weights and the PCM
+    state of a sharded CiMProgram are sharded over ``model``; the batch
+    rides the ``data`` axis.
+    """
+    n = len(jax.devices())
+    model = n if model is None else max(1, min(model, n))
+    while n % model:  # e.g. 8 devices, --mesh-model 3
+        model -= 1
+    return jax.make_mesh((n // model, model), ("data", "model"))

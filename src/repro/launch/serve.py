@@ -13,6 +13,13 @@ execute-many lifecycle); every prefill/decode step then executes against the
 programmed conductances with the GDC epilogue and needs no per-step RNG.
 ``--per-call`` restores the legacy behaviour that re-simulates programming
 inside every forward call -- useful only to measure what program-once saves.
+
+The programmed chip is a deployable artifact: ``--save-program DIR``
+persists it (versioned layout, checkpoint/store.py) and ``--load-program
+DIR`` serves an existing chip draw instead of programming a new one --
+every replica of a fleet loads the SAME chip. ``--mesh-model N`` programs
+and serves sharded (TP degree N over the local devices); the saved artifact
+is layout-free and bit-identical to the host-programmed chip.
 """
 
 from __future__ import annotations
@@ -24,8 +31,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import engine
+from repro.checkpoint import store
 from repro.core.analog import AnalogConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps
 from repro.models import lm
 from repro.models.lm import init_lm_cache, unstack_cache
 
@@ -44,13 +53,26 @@ def main() -> None:
     ap.add_argument("--t-hours", type=float, default=24.0,
                     help="PCM drift time for --analog")
     ap.add_argument("--b-adc", type=int, default=8)
+    ap.add_argument("--mesh-model", type=int, default=0,
+                    help="shard programming+serving with this TP degree")
+    ap.add_argument("--save-program", default=None, metavar="DIR",
+                    help="persist the programmed chip artifact")
+    ap.add_argument("--load-program", default=None, metavar="DIR",
+                    help="serve a saved chip draw (implies --analog)")
     args = ap.parse_args()
     if args.per_call and not args.analog:
         ap.error("--per-call only qualifies --analog (pass both)")
+    if args.load_program and args.per_call:
+        ap.error("--load-program serves a compiled program (no --per-call)")
+    if args.save_program and not (args.analog or args.load_program):
+        ap.error("--save-program needs a compiled program (add --analog)")
+    if args.save_program and args.per_call:
+        ap.error("--per-call compiles no program; nothing to --save-program")
 
     cfg = configs.get_smoke(args.arch)
+    analog = args.analog or args.load_program is not None
     acfg = AnalogConfig()
-    if args.analog:
+    if analog:
         acfg = AnalogConfig().infer(
             b_adc=args.b_adc, t_seconds=args.t_hours * 3600.0
         )
@@ -58,13 +80,39 @@ def main() -> None:
     key = jax.random.PRNGKey(0)
     params = lm.lm_init(key, cfg)
 
-    if args.analog and not args.per_call:
+    mesh = (mesh_lib.make_serving_mesh(args.mesh_model)
+            if args.mesh_model else None)
+    program = None
+    if args.load_program is not None:
+        t0 = time.time()
+        from repro.launch import sharding as shd
+
+        program = store.load_program(
+            args.load_program, params_like=params,
+            shardings=shd.program_shardings(params, mesh, cfg)
+            if mesh is not None else None,
+        )
+        if program.t_seconds != args.t_hours * 3600.0:
+            # same chip, advanced to the requested deployment age
+            program = program.drift_to(args.t_hours * 3600.0)
+        where = f" onto {mesh.devices.size}-device mesh" if mesh else ""
+        print(f"loaded programmed chip ({program.n_layers} layers, "
+              f"t={program.t_seconds/3600.0:.0f}h) "
+              f"in {time.time()-t0:.2f}s from {args.load_program}{where}")
+    elif analog and not args.per_call:
         # Program phase: one pass over the param tree, before any serving.
         t0 = time.time()
-        program = engine.compile_program(params, acfg, jax.random.PRNGKey(42))
-        params, acfg = program.params, program.cfg
-        print(f"programmed {program.n_layers} analog layers once "
+        program = steps.program_for_serving(
+            params, acfg, jax.random.PRNGKey(42), mesh=mesh, model_cfg=cfg,
+        )
+        where = f"on {mesh.devices.size}-device mesh " if mesh else ""
+        print(f"programmed {program.n_layers} analog layers once {where}"
               f"in {time.time()-t0:.2f}s (t={args.t_hours:.0f}h)")
+    if program is not None:
+        params, acfg = program.params, program.cfg
+        if args.save_program:
+            path = store.save_program(args.save_program, program)
+            print(f"saved programmed chip artifact to {path}")
     needs_rng = acfg.needs_rng
 
     b, s = args.batch, args.prompt_len
@@ -106,7 +154,7 @@ def main() -> None:
 
     seqs = jnp.concatenate(out, axis=1)
     mode = acfg.mode
-    print(f"arch={cfg.name} analog={args.analog} mode={mode} "
+    print(f"arch={cfg.name} analog={analog} mode={mode} "
           f"prefill={t_prefill*1e3:.1f}ms "
           f"decode={t_decode/max(args.tokens-1,1)*1e3:.2f}ms/token")
     print("generated token ids (first sequence):",

@@ -154,6 +154,21 @@ def param_shardings(
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+def program_shardings(
+    params, mesh: Mesh, cfg: Optional[ModelConfig] = None
+):
+    """Inference-layout shardings for a *concrete* param tree.
+
+    Convenience wrapper for the program phase: weights TP-sharded over
+    ``model`` and replicated over the data axes (no optimizer state exists,
+    so FSDP sharding would only buy per-step all-gathers). This is the
+    layout ``engine.compile_program`` inherits when building a sharded
+    CiMProgram -- the PCM state is created under jit with these shardings.
+    """
+    params_shape = jax.eval_shape(lambda: params)
+    return param_shardings(params_shape, mesh, cfg, inference=True)
+
+
 def _dp_param_shardings(params_shape, mesh: Mesh):
     all_axes = tuple(mesh.axis_names)
     n = 1

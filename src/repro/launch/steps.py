@@ -29,6 +29,41 @@ from repro.training import optim as optim_lib
 Array = jax.Array
 
 
+def program_for_serving(
+    params: Any,
+    analog_cfg: AnalogConfig,
+    key: Array,
+    *,
+    mesh: Any = None,
+    model_cfg: Optional[ModelConfig] = None,
+    transforms: Optional[dict] = None,
+    with_mapping: bool = False,
+):
+    """Program phase of an analog serving deployment -> CiMProgram.
+
+    With ``mesh``, params are placed in the inference layout (TP over
+    ``model``) first and the PCM state is created under jit with the same
+    shardings -- the chip a fleet would program collectively, bit-identical
+    to the single-host program. The returned program's (params, cfg) feed
+    the prefill/serve steps directly.
+    """
+    from repro.core import engine
+    from repro.launch import sharding as shd
+
+    shardings = None
+    if mesh is not None:
+        shardings = shd.program_shardings(params, mesh, model_cfg)
+        params = jax.device_put(params, shardings)
+    return engine.compile_program(
+        params,
+        analog_cfg,
+        key,
+        transforms=transforms,
+        with_mapping=with_mapping,
+        shardings=shardings,
+    )
+
+
 def make_train_step(
     cfg: ModelConfig,
     analog_cfg: AnalogConfig,

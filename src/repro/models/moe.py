@@ -98,6 +98,21 @@ def _expert_ffn(params: dict, x: Array, ctx: AnalogCtx, dtype) -> Array:
     )
 
 
+def shared_expert_apply(params: dict, x: Array, ctx: AnalogCtx) -> Array:
+    """The always-on shared expert (llama4-style): a SwiGLU of analog
+    linears applied to every token, added to the routed-expert output.
+    Token-pointwise, so any (..., M) layout gives identical results --
+    both dispatch paths (einsum and shard_map) call this on their own
+    token layout."""
+    from repro.core.analog import linear_apply
+
+    sh = params["shared"]
+    h = jax.nn.silu(linear_apply(sh["w1"], x, ctx)) * linear_apply(
+        sh["w3"], x, ctx
+    )
+    return linear_apply(sh["w2"], h, ctx)
+
+
 def _topk_routing(gates: Array, k: int, cap: int):
     """Iterative top-k with per-expert capacity. gates: (G, Sg, E).
 
@@ -192,13 +207,7 @@ def moe_apply(params: dict, x: Array, ctx: AnalogCtx, cfg: ModelConfig) -> Array
         y = shard(y, "moe_groups", None, None)
 
     if "shared" in params:
-        from repro.core.analog import linear_apply
-
-        sh = params["shared"]
-        h = jax.nn.silu(linear_apply(sh["w1"], xt, ctx)) * linear_apply(
-            sh["w3"], xt, ctx
-        )
-        y = y + linear_apply(sh["w2"], h, ctx)
+        y = y + shared_expert_apply(params, xt, ctx)
 
     return y.reshape(b, s, m)
 

@@ -136,9 +136,15 @@ def moe_apply_shardmap(
         out_specs=b_spec,
         check_rep=False,
     )
-    return fn(
+    y = fn(
         x,
         params["router"]["w"],
         params["w1"], params["w3"], params["w2"],
         params["r_adc"], params["w_clip_buf"], scales, ctx.gain_s,
     )
+    if "shared" in params:
+        # The always-on shared expert is token-pointwise (no dispatch), so
+        # it runs outside the all_to_all exchange on the batch-sharded
+        # tokens; the einsum path adds the identical term.
+        y = y + moe_lib.shared_expert_apply(params, x, ctx)
+    return y
