@@ -11,6 +11,7 @@ once and executes many -- the hardware lifecycle and the serving hot path."""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import KWS_BENCH, csv_row, time_call
 from repro.core import engine
@@ -41,12 +42,46 @@ def _serving_rows(fast: bool) -> list[str]:
         lambda p, x: cnn_apply(p, x, program.cfg, cfg)
     )
     us_prog = time_call(programmed, program.params, x, iters=iters)
-    return [
+    rows = [
         csv_row("serve_percall_pcm", us_percall,
                 "reprograms_every_forward"),
         csv_row("serve_programmed_pcm", us_prog,
                 f"program_once_speedup={us_percall / max(us_prog, 1e-9):.2f}x"),
     ]
+    rows.extend(_bitwidth_sweep_rows(params, cfg, iters))
+    return rows
+
+
+def _bitwidth_sweep_rows(params, cfg, iters: int) -> list[str]:
+    """serve_programmed_pcm_b{4,6,8}: the paper's ADC-bitwidth trade.
+
+    Each row times the programmed execute path compiled at that bitwidth
+    and derives the accuracy axis alongside (top-1 agreement with the
+    digital forward on a fixed probe batch) -- the throughput/accuracy
+    trade of Sec. 7 as one tracked number per bitwidth.
+    """
+    digital = AnalogConfig()  # full-precision reference
+    xp = jax.random.normal(
+        jax.random.PRNGKey(3), (32,) + cfg.input_hw + (cfg.in_channels,)
+    )
+    ref = jnp.argmax(cnn_apply(params, xp, digital, cfg), axis=-1)
+    rows = []
+    for bits in (4, 6, 8):
+        acfg_b = AnalogConfig().infer(b_adc=bits, t_seconds=86400.0)
+        prog = engine.compile_program(
+            params, acfg_b, jax.random.PRNGKey(2),
+            transforms=crossbar_transforms(cfg),
+        )
+        run = jax.jit(lambda p, x, _c=prog.cfg: cnn_apply(p, x, _c, cfg))
+        us = time_call(run, prog.params, xp, iters=iters)
+        agree = float(
+            jnp.mean((jnp.argmax(run(prog.params, xp), axis=-1) == ref)
+                     .astype(jnp.float32))
+        )
+        rows.append(csv_row(
+            f"serve_programmed_pcm_b{bits}", us,
+            f"top1_agreement_vs_digital={agree:.4f}"))
+    return rows
 
 
 def run(fast: bool = False) -> list[str]:

@@ -98,6 +98,23 @@ def main() -> None:
             accs.append(float(np.mean(chip_accs)))
         print(f"{tname:>6} " + " ".join(f"{a:.3f}" for a in accs))
 
+    print("\n== mixed-precision program: 4-bit body, 8-bit classifier ==")
+    # Per-layer b_adc overrides (PR 3): the body serves at 4 bits for the
+    # Sec. 7 efficiency headline while the accuracy-critical final layer
+    # keeps 8; the per-layer bitwidths travel inside the saved artifact.
+    # CLI equivalent for LMs:
+    #   python -m repro.launch.serve --analog --b-adc 4 \
+    #       --b-adc-overrides 'lm_head=8' --use-kernel
+    mixed = engine.compile_program(
+        models[4], AnalogConfig().infer(b_adc=4, t_seconds=86400.0),
+        jax.random.PRNGKey(2000), transforms=transforms,
+        b_adc_overrides={"fc": 8},
+    )
+    acc_mixed = common.eval_program_accuracy(mixed, common.KWS_BENCH)
+    bits_by_layer = {p: pl.spec.b_adc for p, pl in mixed.plans.items()}
+    print(f"plan bitwidths: {bits_by_layer}")
+    print(f"mixed-precision accuracy @1d = {acc_mixed:.3f}")
+
     print("\n== AON-CiM layer-serial execution (Table 2 protocol) ==")
     shapes = layer_shapes(common.KWS_BENCH)
     for bits in (8, 6, 4):

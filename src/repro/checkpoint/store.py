@@ -207,7 +207,12 @@ def save_program(path: str, program, *, extra_meta: Optional[dict] = None) -> st
         "version": PROGRAM_VERSION,
         "t_seconds": program.t_seconds,
         "cfg": dataclasses.asdict(program.cfg),
-        "plans": {p: [plan.k, plan.n] for p, plan in program.plans.items()},
+        # per-layer quant plans: geometry + the ADC bitwidth the layer was
+        # compiled at (mixed-precision programs record a bitwidth per path)
+        "plans": {
+            p: [plan.k, plan.n, plan.spec.b_adc]
+            for p, plan in program.plans.items()
+        },
         "mapping": (
             crossbar_lib.mapping_to_dict(program.mapping)
             if program.mapping is not None
@@ -325,6 +330,7 @@ def load_program(path: str, params_like: Any = None, *, shardings: Any = None):
     from repro.core import crossbar as crossbar_lib
     from repro.core import engine as engine_lib
     from repro.core import pcm as pcm_lib
+    from repro.core import quant as quant_lib
     from repro.core.analog import AnalogConfig
 
     if not os.path.exists(os.path.join(path, "COMMIT")):
@@ -377,10 +383,22 @@ def load_program(path: str, params_like: Any = None, *, shardings: Any = None):
             )
     params = _cast_like(params_like, _nest(flat_params))
     state = jax.tree.map(jax.numpy.asarray, _nest(flat_state))
-    plans = {
-        p: engine_lib.plan_for(cfg, k, n)
-        for p, (k, n) in meta["plans"].items()
-    }
+    plans = {}
+    for p, entry in meta["plans"].items():
+        # v1 artifacts predating mixed precision stored [K, N]; newer ones
+        # store [K, N, b_adc]. An off-config bitwidth must be one the
+        # serving path supports -- reject corrupt/hand-edited plans here
+        # rather than failing deep inside the kernel.
+        if len(entry) not in (2, 3):
+            raise ValueError(
+                f"malformed quant plan for layer {p!r} in {path}: {entry!r} "
+                "(expected [K, N] or [K, N, b_adc])"
+            )
+        k, n = int(entry[0]), int(entry[1])
+        bits = int(entry[2]) if len(entry) == 3 else cfg.b_adc
+        if bits != cfg.b_adc:
+            quant_lib.validate_b_adc(bits, f"stored b_adc for layer {p!r}")
+        plans[p] = engine_lib.plan_for(cfg, k, n, b_adc=bits)
     mapping = (
         crossbar_lib.mapping_from_dict(meta["mapping"])
         if meta.get("mapping")

@@ -76,6 +76,11 @@ class AnalogConfig:
     pcm: pcm_lib.PCMConfig = dataclasses.field(default_factory=pcm_lib.PCMConfig)
     use_kernel: bool = False  # route the fused MVM through the Pallas kernel
     interpret: bool = False  # Pallas interpret mode (CPU validation)
+    # pcm_programmed only: resample 1/f read noise per MVM call from stored
+    # pre-read conductance buffers (pcm.read's "at MVM time" contract). The
+    # program then carries per-layer read_bufs and forward calls take an RNG;
+    # calls WITHOUT an RNG still execute the frozen (bit-exact) read draw.
+    resample_read_noise: bool = False
 
     @property
     def spec(self) -> QuantSpec:
@@ -86,8 +91,11 @@ class AnalogConfig:
         """True for modes that draw fresh noise on every forward call.
 
         ``digital`` draws nothing; ``pcm_programmed`` executes a compiled
-        CiMProgram whose noise is frozen in the programmed weights.
+        CiMProgram whose noise is frozen in the programmed weights -- unless
+        ``resample_read_noise`` asks for a fresh read draw per MVM.
         """
+        if self.mode == PCM_PROGRAMMED:
+            return self.resample_read_noise
         return self.mode in (ANALOG_TRAIN, PCM_INFER)
 
     def train(self, **kw) -> "AnalogConfig":
@@ -122,25 +130,34 @@ def analog_matmul(
     w_max: Array,
     ctx: AnalogCtx,
     out_scale: Optional[Array] = None,
+    b_adc: Optional[int] = None,
+    read_buf: Optional[dict] = None,
 ) -> Array:
     """The framework-wide analog-aware matmul. x: (..., K), w: (K, N).
 
     A plan dispatcher: derives the layer's static ExecutionPlan (cached per
-    (config, K, N)) and routes every mode through the engine's unified
+    (config, K, N, bits)) and routes every mode through the engine's unified
     execute phase. ``out_scale`` is the layer's GDC scalar in
     ``pcm_programmed`` mode (``None`` elsewhere, or for layers that were
-    not part of the compiled program).
+    not part of the compiled program). ``b_adc`` overrides the config's ADC
+    bitwidth for this layer (mixed-precision programs; the DAC keeps one
+    extra bit via the plan's QuantSpec). ``read_buf`` is the layer's
+    pre-read conductance buffer for per-MVM read-noise resampling
+    (``pcm_programmed`` with ``cfg.resample_read_noise``; ignored without
+    an RNG in the ctx so the default execute stays bit-exact).
     """
     cfg = ctx.cfg
     if cfg.mode == DIGITAL:
         return engine_lib.execute_digital(x, w)
 
-    plan = engine_lib.plan_for(cfg, int(w.shape[-2]), int(w.shape[-1]))
+    plan = engine_lib.plan_for(
+        cfg, int(w.shape[-2]), int(w.shape[-1]), b_adc=b_adc
+    )
 
     # fake-quant promotes to f32 (range params are f32); keep the analog
     # chain in f32 internally and restore the caller's dtype at the end
     out_dtype = x.dtype
-    spec = cfg.spec
+    spec = plan.spec
     if cfg.mode == ANALOG_TRAIN:
         w_key = ctx.next_key()
         w_eff = noise_lib.inject(w_key, w, cfg.eta, w_min, w_max)
@@ -167,13 +184,23 @@ def analog_matmul(
 
     if cfg.mode == PCM_PROGRAMMED:
         # Execute phase: ``w`` already holds PCM effective weights from a
-        # compiled CiMProgram; no per-call weight work, no RNG required.
+        # compiled CiMProgram; no per-call weight work. With a read_buf AND
+        # an RNG, the frozen read draw is replaced by a fresh per-MVM draw
+        # from the stored pre-read conductances (pcm.read semantics);
+        # without an RNG the frozen weights execute bit-exactly as before.
+        w_exec = w
+        if read_buf is not None and cfg.resample_read_noise:
+            r_key = ctx.next_key()
+            if r_key is not None:
+                w_exec = engine_lib.resample_read(r_key, read_buf).astype(
+                    w.dtype
+                )
         x_q = quant_lib.dac_quantize(x, r_adc, ctx.gain_s, w_max, spec, None)
         x_q = x_q.astype(out_dtype)
         scale = 1.0 if out_scale is None else out_scale
         return engine_lib.execute_mvm(
             x_q,
-            w.astype(x_q.dtype),
+            w_exec.astype(x_q.dtype),
             r_adc,
             plan,
             out_scale=scale,
@@ -240,6 +267,8 @@ def linear_apply(params: dict, x: Array, ctx: AnalogCtx) -> Array:
         w_max=w_max,
         ctx=ctx,
         out_scale=params.get("out_scale_buf"),
+        b_adc=engine_lib.bits_of(params.get("b_adc_buf")),
+        read_buf=params.get("read_buf"),
     )
     if "b" in params:
         # Bias is applied in the digital domain, after the ADC (paper Sec. 3.1).

@@ -34,9 +34,10 @@ partial sums in VMEM instead of materializing the (..., T, N) tensor in HBM.
 from __future__ import annotations
 
 import dataclasses
+import fnmatch
 import functools
 import math
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Mapping as MappingT, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -100,22 +101,88 @@ class ExecutionPlan:
 
 
 @functools.lru_cache(maxsize=4096)
-def plan_for(cfg, k: int, n: int) -> ExecutionPlan:
+def plan_for(cfg, k: int, n: int, b_adc: Optional[int] = None) -> ExecutionPlan:
     """Derive (and cache) the static execution plan for a (K, N) layer.
 
     ``cfg`` is a (hashable, frozen) AnalogConfig; the plan is pure geometry
     + mode flags, so one cache entry serves every call of the same shape.
+
+    ``b_adc`` overrides the config's ADC bitwidth for this layer (the DAC
+    keeps ``b_adc + 1`` bits per Eq. 3 -- that relation lives in QuantSpec).
+    Per-layer overrides are how mixed-precision programs execute: the layer
+    carries its bitwidth (see :func:`b_adc_buf` / :func:`bits_of`) and every
+    downstream consumer -- the jnp oracle, the fused kernel epilogue -- reads
+    the bits from the plan's spec. Overrides are validated against the
+    serving-supported set {4, 6, 8}; the default (``None``) keeps whatever
+    the config says, including training-only widths like 16.
     """
+    spec = cfg.spec
+    if b_adc is not None and b_adc != spec.b_adc:
+        quant_lib.validate_b_adc(b_adc, "per-layer b_adc override")
+        spec = dataclasses.replace(spec, b_adc=int(b_adc))
     return ExecutionPlan(
         k=k,
         n=n,
         tile_rows=cfg.tile_rows,
         tile_cols=cfg.tile_cols,
         per_tile_adc=cfg.per_tile_adc,
-        spec=cfg.spec,
+        spec=spec,
         use_kernel=cfg.use_kernel,
         interpret=cfg.interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Per-layer ADC bitwidths (mixed-precision serving)
+#
+# The execute phase runs under jit, where params leaves are tracers -- a
+# bitwidth stored as an array *value* could not feed the kernel's static
+# ``bits`` argument. The bitwidth is therefore encoded in a buffer's trailing
+# SHAPE (shapes are static under tracing): a layer programmed at b_adc=4
+# carries ``b_adc_buf`` with trailing dimension 4. Stack dims (scanned LM
+# groups, MoE expert banks) are prepended so the buffer slices/scans in
+# lockstep with the weights; every member of one stack shares one bitwidth.
+# ---------------------------------------------------------------------------
+
+#: dict/sequence of (layer-path pattern -> b_adc) accepted by
+#: :func:`compile_program`; patterns use fnmatch syntax over '/'-joined
+#: walk paths ("blocks/*/ffn/w1", "lm_head", ...).
+BitOverrides = Union[MappingT[str, int], tuple]
+
+
+def normalize_b_adc_overrides(overrides: Optional[BitOverrides]) -> tuple:
+    """Normalize overrides to a ((pattern, bits), ...) tuple; validate bits."""
+    if not overrides:
+        return ()
+    items = (
+        tuple(overrides.items())
+        if isinstance(overrides, MappingT)
+        else tuple(tuple(it) for it in overrides)
+    )
+    for pat, bits in items:
+        quant_lib.validate_b_adc(int(bits), f"b_adc override for {pat!r}")
+    return tuple((str(p), int(b)) for p, b in items)
+
+
+def resolve_b_adc(
+    overrides: tuple, path: str, default: int
+) -> int:
+    """Bitwidth for ``path``: last matching override pattern wins."""
+    bits = default
+    for pat, b in overrides:
+        if path == pat or fnmatch.fnmatchcase(path, pat):
+            bits = b
+    return bits
+
+
+def b_adc_buf(stack: tuple, bits: int) -> Array:
+    """Shape-encoded per-layer bitwidth buffer (values double as a record)."""
+    return jnp.full(tuple(stack) + (int(bits),), int(bits), jnp.int8)
+
+
+def bits_of(buf: Optional[Array]) -> Optional[int]:
+    """Static bitwidth of a ``b_adc_buf`` leaf (or None when absent)."""
+    return None if buf is None else int(buf.shape[-1])
 
 
 # ---------------------------------------------------------------------------
@@ -166,8 +233,16 @@ def tile_matmul_quant(
         "...tk,tkn->...tn", xt, wt, preferred_element_type=acc_dtype
     )
     y_tiles = quant_lib.adc_quantize(y_tiles, r_adc, spec, qn_key)
-    # per-tile quantized partials are grid values: store at compute dtype
-    y = jnp.sum(y_tiles.astype(x.dtype), axis=-2, dtype=acc_dtype)
+    # per-tile quantized partials are grid values: store at compute dtype.
+    # Digital accumulation runs tile-serially (t=0..T-1), matching both the
+    # hardware's layer-serial ADC readout order and the fused kernel's VMEM
+    # accumulator -- float addition is non-associative, so a tree-reduce
+    # here would put the oracle one ulp off the kernel and break the
+    # kernel-vs-oracle bit-identity the low-bit parity tests pin down.
+    y_tiles = y_tiles.astype(x.dtype).astype(acc_dtype)
+    y = y_tiles[..., 0, :]
+    for t in range(1, n_tiles):
+        y = y + y_tiles[..., t, :]
     return (y * out_scale).astype(x.dtype)
 
 
@@ -280,6 +355,66 @@ def _drift_read_2d(state: dict, t: Array, cfg: pcm_lib.PCMConfig):
     return w_eff, gdc
 
 
+def _read_buffers_2d(state: dict, t: Array, cfg: pcm_lib.PCMConfig) -> dict:
+    """Pre-read execute-time buffers for per-MVM read-noise resampling.
+
+    ``pcm.read``'s contract is "read noise is sampled at MVM time", but the
+    frozen ``w_eff`` of a compiled program necessarily bakes ONE read draw in
+    (required for bit-exact executes). This returns what the execute phase
+    needs to honour the per-MVM contract instead: the drifted conductances
+    *before* any read draw, plus the per-device read-noise sigmas at time
+    ``t`` (sigma = G_D * Q * sqrt(log((t+t_r)/t_r))), and the weight scale.
+    Drift exponents derive from the stored layer key exactly as in
+    :func:`_drift_read_2d`, so these buffers describe the same chip.
+    """
+    k_dp, k_dn, _, _ = jax.random.split(state["key"], 4)
+    g_pos, g_neg = state["g_pos"], state["g_neg"]
+    if cfg.drift:
+        nu_p = pcm_lib.sample_drift_nu(k_dp, g_pos.shape, cfg)
+        nu_n = pcm_lib.sample_drift_nu(k_dn, g_neg.shape, cfg)
+        g_pos = g_pos * pcm_lib.drift_factor(nu_p, t)
+        g_neg = g_neg * pcm_lib.drift_factor(nu_n, t)
+    if cfg.read_noise:
+        scale_t = pcm_lib.read_noise_scale(t)
+        sigma_pos = g_pos * state["q_pos"] * scale_t
+        sigma_neg = g_neg * state["q_neg"] * scale_t
+    else:
+        sigma_pos = jnp.zeros_like(g_pos)
+        sigma_neg = jnp.zeros_like(g_neg)
+    return {
+        "g_pos": g_pos,
+        "g_neg": g_neg,
+        "sigma_pos": sigma_pos,
+        "sigma_neg": sigma_neg,
+        "w_scale": state["w_scale"],
+    }
+
+
+def resample_read(key: Array, buf: dict) -> Array:
+    """One fresh per-MVM read-noise draw -> effective weights.
+
+    ``buf`` is the per-layer ``read_buf`` built by :func:`read_buffers`
+    (possibly with leading stack dims). Matches ``pcm.read``: G ~ N(G_D,
+    sigma), clipped at zero, mapped back to weight units.
+    """
+    k_p, k_n = jax.random.split(key)
+    g_pos = jnp.maximum(
+        buf["g_pos"]
+        + buf["sigma_pos"]
+        * jax.random.normal(k_p, buf["g_pos"].shape, jnp.float32),
+        0.0,
+    )
+    g_neg = jnp.maximum(
+        buf["g_neg"]
+        + buf["sigma_neg"]
+        * jax.random.normal(k_n, buf["g_neg"].shape, jnp.float32),
+        0.0,
+    )
+    w_scale = buf["w_scale"]
+    w_scale = w_scale.reshape(w_scale.shape + (1, 1))
+    return (g_pos - g_neg) * w_scale
+
+
 def _stacked(fn: Callable, n_stack_dims: int) -> Callable:
     """vmap ``fn`` over ``n_stack_dims`` leading axes of every argument."""
     for _ in range(n_stack_dims):
@@ -371,6 +506,52 @@ def _jitted_drift(
             NamedSharding(mesh, PartitionSpec(*spec[:n_stack_dims])),
         ),
     )
+
+
+@functools.lru_cache(maxsize=512)
+def _jitted_read_buffers(
+    cfg: pcm_lib.PCMConfig,
+    n_stack_dims: int,
+    w_sharding: Optional[NamedSharding],
+):
+    def fn(state, t):
+        return _stacked(lambda s: _read_buffers_2d(s, t, cfg), n_stack_dims)(
+            state
+        )
+
+    if w_sharding is None:
+        return jax.jit(fn)
+    mesh = w_sharding.mesh
+    spec = _full_spec(w_sharding, n_stack_dims + 2)
+    full = NamedSharding(mesh, PartitionSpec(*spec))
+    stack = NamedSharding(mesh, PartitionSpec(*spec[:n_stack_dims]))
+    return jax.jit(
+        fn,
+        out_shardings={
+            "g_pos": full,
+            "g_neg": full,
+            "sigma_pos": full,
+            "sigma_neg": full,
+            "w_scale": stack,
+        },
+    )
+
+
+def read_buffers(
+    state: dict,
+    t_seconds,
+    cfg: pcm_lib.PCMConfig,
+    *,
+    n_stack_dims: int,
+    sharding: Optional[NamedSharding] = None,
+) -> dict:
+    """Per-MVM read-noise buffers of a programmed state at ``t_seconds``.
+
+    Jitted and sharding-preserving like :func:`drift_state`; see
+    :func:`_read_buffers_2d` for contents and :func:`resample_read` for use.
+    """
+    t = jnp.asarray(t_seconds, jnp.float32)
+    return _jitted_read_buffers(cfg, n_stack_dims, sharding)(state, t)
 
 
 def program_weight(
@@ -467,7 +648,9 @@ _MOE_FAMILIES = ("w1", "w3", "w2")  # row order of r_adc / w_clip_buf
 #: expert-bank keys consumed by the bank programming itself; sibling entries
 #: (e.g. the MoE dict's "shared" expert linear layers, the digital router)
 #: must still be walked.
-_BANK_KEYS = frozenset(_MOE_FAMILIES) | {"r_adc", "w_clip_buf", "out_scale_buf"}
+_BANK_KEYS = frozenset(_MOE_FAMILIES) | {
+    "r_adc", "w_clip_buf", "out_scale_buf", "b_adc_buf", "read_buf"
+}
 
 
 def _walk(tree: Any, fn: Callable[[str, dict], dict], path: str = "") -> Any:
@@ -544,23 +727,37 @@ class CiMProgram:
             st = self.state[path]
             new = dict(node)
             if "w" in node:
+                sharding = _layer_sharding(node["w"])
+                n_stack = st["g_pos"].ndim - 2
                 w_eff, gdc = drift_state(
                     st, t_seconds, pcm_cfg,
-                    n_stack_dims=st["g_pos"].ndim - 2,
-                    sharding=_layer_sharding(node["w"]),
+                    n_stack_dims=n_stack, sharding=sharding,
                 )
                 new["w"] = w_eff.astype(node["w"].dtype)
                 new["out_scale_buf"] = gdc
+                if "read_buf" in node:
+                    new["read_buf"] = read_buffers(
+                        st, t_seconds, pcm_cfg,
+                        n_stack_dims=n_stack, sharding=sharding,
+                    )
             else:
-                scales = []
+                scales, read_bufs = [], {}
                 for fam in _MOE_FAMILIES:
+                    sharding = _layer_sharding(node[fam])
+                    n_stack = st[fam]["g_pos"].ndim - 2
                     w_eff, gdc = drift_state(
                         st[fam], t_seconds, pcm_cfg,
-                        n_stack_dims=st[fam]["g_pos"].ndim - 2,
-                        sharding=_layer_sharding(node[fam]),
+                        n_stack_dims=n_stack, sharding=sharding,
                     )
                     new[fam] = w_eff.astype(node[fam].dtype)
                     scales.append(gdc)
+                    if "read_buf" in node:
+                        read_bufs[fam] = read_buffers(
+                            st[fam], t_seconds, pcm_cfg,
+                            n_stack_dims=n_stack, sharding=sharding,
+                        )
+                if read_bufs:
+                    new["read_buf"] = read_bufs
                 new["out_scale_buf"] = jnp.stack(scales, axis=-2)
             return new
 
@@ -606,6 +803,7 @@ def compile_program(
     transforms: Optional[dict[str, Callable[[Array], Array]]] = None,
     with_mapping: bool = False,
     shardings: Any = None,
+    b_adc_overrides: Optional[BitOverrides] = None,
 ) -> CiMProgram:
     """Program phase: walk ``params`` once and build a :class:`CiMProgram`.
 
@@ -632,9 +830,21 @@ def compile_program(
     by the caller) inherit their own shardings automatically. The chip is
     bit-identical either way (det_sum + sharding-invariant RNG); layers
     with a ``transforms`` entry change shape and are programmed host-side.
+
+    ``b_adc_overrides``: per-layer ADC bitwidths for mixed-precision serving
+    -- a {path-pattern: bits} dict (fnmatch over walk paths; MoE expert
+    banks match the *bank* path, all three weight families share the bank's
+    ADCs). Matched layers get a plan quantizing at ``bits`` (DAC at
+    ``bits + 1``) and carry a shape-encoded ``b_adc_buf`` so the execute
+    phase recovers the bitwidth statically under jit; bits must be in
+    {4, 6, 8}. Unmatched layers use ``cfg.b_adc``.
     """
     t = float(cfg.t_seconds if t_seconds is None else t_seconds)
     transforms = transforms or {}
+    overrides = normalize_b_adc_overrides(b_adc_overrides)
+    if overrides:
+        quant_lib.validate_b_adc(cfg.b_adc, "cfg.b_adc (with overrides)")
+    want_read_buf = bool(getattr(cfg, "resample_read_noise", False))
     shard_of = sharding_lookup(shardings)
     state: dict[str, Any] = {}
     plans: dict[str, ExecutionPlan] = {}
@@ -645,9 +855,11 @@ def compile_program(
         counter["n"] += 1
         return jax.random.fold_in(key, counter["n"])
 
-    def add_plan(path: str, w2d: Array, count: int = 1) -> None:
+    def add_plan(
+        path: str, w2d: Array, count: int = 1, bits: Optional[int] = None
+    ) -> None:
         k_dim, n_dim = int(w2d.shape[-2]), int(w2d.shape[-1])
-        plans[path] = plan_for(cfg, k_dim, n_dim)
+        plans[path] = plan_for(cfg, k_dim, n_dim, b_adc=bits)
         for i in range(count):
             shapes.append(
                 LayerShape(f"{path}[{i}]" if count > 1 else path,
@@ -663,6 +875,7 @@ def compile_program(
 
     def program_node(path: str, node: dict) -> dict:
         new = dict(node)
+        bits = resolve_b_adc(overrides, path, cfg.b_adc)
         if "w" in node:
             w2d = transforms.get(path, lambda w: w)(node["w"])
             if w2d.ndim > 3:
@@ -679,17 +892,26 @@ def compile_program(
                 )
             buf = node["w_clip_buf"]
             w_min, w_max = buf[..., 0], buf[..., 1]
+            sharding = layer_sharding(path, f"{path}/w", node["w"])
             w_eff, gdc, st = program_weight(
                 next_key(), w2d, w_min, w_max, t, cfg.pcm,
-                sharding=layer_sharding(path, f"{path}/w", node["w"]),
+                sharding=sharding,
             )
             new["w"] = w_eff.astype(node["w"].dtype)
             new["out_scale_buf"] = gdc
+            stack = w2d.shape[:-2]
+            if bits != cfg.b_adc:
+                new["b_adc_buf"] = b_adc_buf(stack, bits)
+            if want_read_buf:
+                new["read_buf"] = read_buffers(
+                    st, t, cfg.pcm,
+                    n_stack_dims=len(stack), sharding=sharding,
+                )
             state[path] = st
-            n_members = math.prod(w2d.shape[:-2]) if w2d.ndim > 2 else 1
-            add_plan(path, w2d, n_members)
+            n_members = math.prod(stack) if w2d.ndim > 2 else 1
+            add_plan(path, w2d, n_members, bits=bits)
         else:  # MoE expert bank
-            st_fams, scales = {}, []
+            st_fams, scales, read_bufs = {}, [], {}
             for f, fam in enumerate(_MOE_FAMILIES):
                 w = node[fam]
                 buf = node["w_clip_buf"]  # (..., 3, 2)
@@ -702,18 +924,31 @@ def compile_program(
                     buf[..., f, 1][..., None] if stack else buf[..., f, 1],
                     stack,
                 )
+                sharding = layer_sharding(path, f"{path}/{fam}", w)
                 w_eff, gdc, st = program_weight(
                     next_key(), w, w_min, w_max, t, cfg.pcm,
-                    sharding=layer_sharding(path, f"{path}/{fam}", w),
+                    sharding=sharding,
                 )
                 new[fam] = w_eff.astype(w.dtype)
                 st_fams[fam] = st
                 scales.append(gdc)
+                if want_read_buf:
+                    read_bufs[fam] = read_buffers(
+                        st, t, cfg.pcm,
+                        n_stack_dims=len(stack), sharding=sharding,
+                    )
                 add_plan(
                     f"{path}/{fam}", w,
                     math.prod(stack) if stack else 1,
+                    bits=bits,
                 )
             new["out_scale_buf"] = jnp.stack(scales, axis=-2)
+            if bits != cfg.b_adc:
+                # one bitwidth per bank: all three families share the
+                # physical per-layer ADC configuration (fixed-gain Eq. 5)
+                new["b_adc_buf"] = b_adc_buf(stack, bits)
+            if want_read_buf:
+                new["read_buf"] = read_bufs
             state[path] = st_fams
         return new
 

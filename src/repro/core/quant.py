@@ -27,6 +27,22 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+#: ADC bitwidths the AON-CiM serving path supports (paper Sec. 7: the
+#: headline TOPS/W numbers are reported at exactly these three points).
+#: Training may use other widths (e.g. b_adc=16 as a no-op quantizer), but
+#: compiled CiMPrograms and saved artifacts are validated against this set.
+SUPPORTED_B_ADC = (4, 6, 8)
+
+
+def validate_b_adc(bits: int, where: str = "b_adc") -> int:
+    """Check a serving-path ADC bitwidth against :data:`SUPPORTED_B_ADC`."""
+    if bits not in SUPPORTED_B_ADC:
+        raise ValueError(
+            f"{where}={bits!r} is not a supported serving ADC bitwidth "
+            f"(one of {SUPPORTED_B_ADC})"
+        )
+    return int(bits)
+
 
 def round_ste(x: Array) -> Array:
     """Round-to-nearest with a straight-through gradient (Bengio et al. 2013)."""

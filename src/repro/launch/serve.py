@@ -20,11 +20,23 @@ DIR`` serves an existing chip draw instead of programming a new one --
 every replica of a fleet loads the SAME chip. ``--mesh-model N`` programs
 and serves sharded (TP degree N over the local devices); the saved artifact
 is layout-free and bit-identical to the host-programmed chip.
+
+Low-precision serving: ``--b-adc {4,6,8}`` compiles every layer's quant plan
+(and the fused kernel's epilogue) at that ADC bitwidth -- the paper's
+efficiency headline comes from exactly this knob (8.58 -> 57.39 TOPS/W for
+KWS at 8 -> 4 bits, Sec. 7). ``--b-adc-overrides 'lm_head=8,blocks/*=4'``
+compiles a mixed-precision program (fnmatch patterns over layer walk paths;
+the bitwidth is recorded per layer in the saved artifact). Analog serving
+also reports accuracy counters -- greedy top-1 agreement and logit MSE
+against the digital full-precision reference, teacher-forced on the analog
+token stream -- so the throughput/accuracy trade is a printed number
+(``--no-ref-check`` skips the reference pass).
 """
 
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import jax
@@ -33,10 +45,28 @@ import jax.numpy as jnp
 from repro import configs
 from repro.checkpoint import store
 from repro.core.analog import AnalogConfig
+from repro.core.quant import SUPPORTED_B_ADC
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps
 from repro.models import lm
 from repro.models.lm import init_lm_cache, unstack_cache
+
+
+def parse_b_adc_overrides(text: str) -> dict:
+    """Parse 'pattern=bits,pattern=bits' into an overrides dict."""
+    out = {}
+    for item in text.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        pat, sep, bits = item.partition("=")
+        if not sep or not bits.strip().isdigit():
+            raise ValueError(
+                f"bad --b-adc-overrides entry {item!r} "
+                "(want pattern=bits with integer bits)"
+            )
+        out[pat.strip()] = int(bits)
+    return out
 
 
 def main() -> None:
@@ -52,7 +82,23 @@ def main() -> None:
                     help="legacy: re-simulate PCM programming every forward")
     ap.add_argument("--t-hours", type=float, default=24.0,
                     help="PCM drift time for --analog")
-    ap.add_argument("--b-adc", type=int, default=8)
+    ap.add_argument("--b-adc", type=int, default=None,
+                    choices=list(SUPPORTED_B_ADC),
+                    help="ADC bitwidth for analog serving (default 8); with "
+                         "--load-program it must match the artifact")
+    ap.add_argument("--b-adc-overrides", default=None, metavar="SPEC",
+                    help="mixed-precision: comma list of pattern=bits over "
+                         "layer paths, e.g. 'lm_head=8,blocks/*=4'")
+    ap.add_argument("--resample-read-noise", action="store_true",
+                    help="resample PCM 1/f read noise per MVM from stored "
+                         "pre-read conductances (default: frozen draw, "
+                         "bit-exact executes)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="execute through the fused Pallas MVM kernel "
+                         "(interpret mode off-TPU); bit-identical to the "
+                         "jnp oracle for single-row-tile layers")
+    ap.add_argument("--no-ref-check", action="store_true",
+                    help="skip the digital-reference accuracy counters")
     ap.add_argument("--mesh-model", type=int, default=0,
                     help="shard programming+serving with this TP degree")
     ap.add_argument("--save-program", default=None, metavar="DIR",
@@ -68,17 +114,36 @@ def main() -> None:
         ap.error("--save-program needs a compiled program (add --analog)")
     if args.save_program and args.per_call:
         ap.error("--per-call compiles no program; nothing to --save-program")
+    if args.b_adc_overrides and (args.per_call or args.load_program):
+        ap.error("--b-adc-overrides applies at program-compile time "
+                 "(use with --analog, not --per-call/--load-program)")
+    if args.b_adc_overrides and not args.analog:
+        ap.error("--b-adc-overrides needs --analog")
+    if args.resample_read_noise and (
+        args.per_call or not (args.analog or args.load_program)
+    ):
+        ap.error("--resample-read-noise needs a compiled program "
+                 "(--analog or --load-program, without --per-call)")
+    b_adc = 8 if args.b_adc is None else args.b_adc
+    overrides = None
+    if args.b_adc_overrides:
+        try:
+            overrides = parse_b_adc_overrides(args.b_adc_overrides)
+        except ValueError as e:
+            ap.error(str(e))
 
     cfg = configs.get_smoke(args.arch)
     analog = args.analog or args.load_program is not None
     acfg = AnalogConfig()
     if analog:
         acfg = AnalogConfig().infer(
-            b_adc=args.b_adc, t_seconds=args.t_hours * 3600.0
+            b_adc=b_adc, t_seconds=args.t_hours * 3600.0,
+            resample_read_noise=args.resample_read_noise,
         )
 
     key = jax.random.PRNGKey(0)
     params = lm.lm_init(key, cfg)
+    ref_params = params  # digital full-precision reference for counters
 
     mesh = (mesh_lib.make_serving_mesh(args.mesh_model)
             if args.mesh_model else None)
@@ -92,11 +157,24 @@ def main() -> None:
             shardings=shd.program_shardings(params, mesh, cfg)
             if mesh is not None else None,
         )
+        if args.b_adc is not None and program.cfg.b_adc != args.b_adc:
+            ap.error(
+                f"--b-adc {args.b_adc} does not match the loaded artifact "
+                f"(compiled at b_adc={program.cfg.b_adc}); bitwidths are "
+                "baked into a program's quant plans at compile time"
+            )
+        if args.resample_read_noise and not program.cfg.resample_read_noise:
+            ap.error(
+                "--resample-read-noise: the loaded artifact carries no "
+                "read buffers (compile it with --analog "
+                "--resample-read-noise --save-program)"
+            )
         if program.t_seconds != args.t_hours * 3600.0:
             # same chip, advanced to the requested deployment age
             program = program.drift_to(args.t_hours * 3600.0)
         where = f" onto {mesh.devices.size}-device mesh" if mesh else ""
         print(f"loaded programmed chip ({program.n_layers} layers, "
+              f"b_adc={program.cfg.b_adc}, "
               f"t={program.t_seconds/3600.0:.0f}h) "
               f"in {time.time()-t0:.2f}s from {args.load_program}{where}")
     elif analog and not args.per_call:
@@ -104,15 +182,27 @@ def main() -> None:
         t0 = time.time()
         program = steps.program_for_serving(
             params, acfg, jax.random.PRNGKey(42), mesh=mesh, model_cfg=cfg,
+            b_adc_overrides=overrides,
         )
         where = f"on {mesh.devices.size}-device mesh " if mesh else ""
+        mixed = f" with {len(overrides)} bitwidth overrides" if overrides else ""
         print(f"programmed {program.n_layers} analog layers once {where}"
-              f"in {time.time()-t0:.2f}s (t={args.t_hours:.0f}h)")
+              f"in {time.time()-t0:.2f}s (b_adc={b_adc}{mixed}, "
+              f"t={args.t_hours:.0f}h)")
     if program is not None:
         params, acfg = program.params, program.cfg
         if args.save_program:
             path = store.save_program(args.save_program, program)
             print(f"saved programmed chip artifact to {path}")
+    if args.use_kernel:
+        import dataclasses
+
+        # per-layer bits travel in the params (shape-encoded b_adc_buf), so
+        # flipping the backend needs no recompile of the program itself
+        acfg = dataclasses.replace(
+            acfg, use_kernel=True,
+            interpret=jax.default_backend() != "tpu",
+        )
     needs_rng = acfg.needs_rng
 
     b, s = args.batch, args.prompt_len
@@ -141,22 +231,78 @@ def main() -> None:
             params, {"tokens": tokens}, acfg, cfg, cache=cache,
             rng=rng if needs_rng else None,
         )
-        return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32), cache
+        logits = logits[:, -1]
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, cache
+
+    # Digital full-precision reference, teacher-forced on the analog token
+    # stream: at every emitted position the two models see identical inputs,
+    # so top-1 agreement / logit MSE isolate the analog (quantization + PCM)
+    # error -- the accuracy axis of the paper's bitwidth trade (Sec. 7).
+    # Counters are running sums (device scalars), not stored logits: the
+    # full-vocab logit history would be O(tokens * batch * vocab) host RAM.
+    ref_check = analog and not args.no_ref_check
+    agree_sum = err_sum = jnp.zeros((), jnp.float32)
+    n_decisions = n_elems = 0
+    if ref_check:
+        dig = AnalogConfig()
+
+        @jax.jit
+        def ref_decode(params, tokens, cache):
+            logits, cache = lm.lm_forward(
+                params, {"tokens": tokens}, dig, cfg, cache=cache
+            )
+            return logits[:, -1], cache
+
+        @jax.jit
+        def count_step(a, r):
+            a, r = a.astype(jnp.float32), r.astype(jnp.float32)
+            agree = jnp.sum(
+                (jnp.argmax(a, axis=-1) == jnp.argmax(r, axis=-1)).astype(
+                    jnp.float32
+                )
+            )
+            return agree, jnp.sum((a - r) ** 2)
+
+        def accumulate(a, r):
+            nonlocal agree_sum, err_sum, n_decisions, n_elems
+            agree, err = count_step(a, r)
+            agree_sum = agree_sum + agree
+            err_sum = err_sum + err
+            n_decisions += int(math.prod(a.shape[:-1]))
+            n_elems += a.size
+
+        ref_cache = init_lm_cache(cfg, b, s_max, cfg.dtype)
+        ref_logit, ref_cache = lm.lm_forward(
+            ref_params, batch, dig, cfg, cache=ref_cache, last_token_only=True
+        )
+        ref_cache = unstack_cache(ref_cache)
+        accumulate(logits[:, -1], ref_logit[:, -1])
 
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     out = [tok]
     t0 = time.time()
     for i in range(args.tokens - 1):
-        tok, cache = decode(params, tok, cache, jax.random.fold_in(key, i))
+        tok, step_logits, cache = decode(
+            params, tok, cache, jax.random.fold_in(key, i)
+        )
+        tok = tok[:, None]
+        if ref_check:
+            ref_logit, ref_cache = ref_decode(ref_params, out[-1], ref_cache)
+            accumulate(step_logits, ref_logit)
         out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
 
     seqs = jnp.concatenate(out, axis=1)
     mode = acfg.mode
-    print(f"arch={cfg.name} analog={analog} mode={mode} "
+    print(f"arch={cfg.name} analog={analog} mode={mode} b_adc={acfg.b_adc} "
           f"prefill={t_prefill*1e3:.1f}ms "
           f"decode={t_decode/max(args.tokens-1,1)*1e3:.2f}ms/token")
+    if ref_check:
+        agree = float(agree_sum) / max(n_decisions, 1)
+        mse = float(err_sum) / max(n_elems, 1)
+        print(f"accuracy_vs_digital_ref: top1_agreement={agree:.4f} "
+              f"logit_mse={mse:.6e} decisions={n_decisions}")
     print("generated token ids (first sequence):",
           seqs[0, : min(16, seqs.shape[1])].tolist())
 

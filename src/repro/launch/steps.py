@@ -38,6 +38,7 @@ def program_for_serving(
     model_cfg: Optional[ModelConfig] = None,
     transforms: Optional[dict] = None,
     with_mapping: bool = False,
+    b_adc_overrides: Optional[dict] = None,
 ):
     """Program phase of an analog serving deployment -> CiMProgram.
 
@@ -46,6 +47,10 @@ def program_for_serving(
     shardings -- the chip a fleet would program collectively, bit-identical
     to the single-host program. The returned program's (params, cfg) feed
     the prefill/serve steps directly.
+
+    ``b_adc_overrides``: per-layer {path-pattern: bits in {4, 6, 8}} for
+    mixed-precision programs (e.g. keep the lm_head at 8 bits while the
+    block projections serve at 4) -- see ``engine.compile_program``.
     """
     from repro.core import engine
     from repro.launch import sharding as shd
@@ -61,6 +66,7 @@ def program_for_serving(
         transforms=transforms,
         with_mapping=with_mapping,
         shardings=shardings,
+        b_adc_overrides=b_adc_overrides,
     )
 
 

@@ -20,7 +20,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as engine_lib
 from repro.core.analog import AnalogCtx, analog_matmul
+from repro.core.engine import PCM_PROGRAMMED
 from repro.models.common import ModelConfig, shard
 
 Array = jax.Array
@@ -50,16 +52,39 @@ def moe_init(key: Array, cfg: ModelConfig) -> dict:
     return params
 
 
-def _expert_ffn(params: dict, x: Array, ctx: AnalogCtx, dtype) -> Array:
+def _expert_ffn(
+    params: dict, x: Array, ctx: AnalogCtx, dtype, b_adc=None
+) -> Array:
     """x: (E, G, C, M) -> (E, G, C, M); SwiGLU per expert, analog-mapped.
 
     ``out_scale_buf`` (3, E) carries per-(family, expert) GDC scalars when
     the expert bank was programmed by ``engine.compile_program``; otherwise
-    the scales are 1 (training / per-call modes ignore them).
+    the scales are 1 (training / per-call modes ignore them). ``b_adc`` is
+    the bank's per-layer ADC bitwidth (mixed-precision programs); when None
+    it is recovered from the bank's shape-encoded ``b_adc_buf`` (the
+    shard_map dispatch resolves it outside its body and passes it in, since
+    closing over param tracers inside shard_map is illegal). A programmed
+    bank with ``read_buf`` + RNG resamples per-MVM read noise for the whole
+    bank before the expert vmap.
     """
     scales = params.get("out_scale_buf")
     if scales is None:
         scales = jnp.ones((3, params["w1"].shape[0]), jnp.float32)
+    if b_adc is None:
+        b_adc = engine_lib.bits_of(params.get("b_adc_buf"))
+
+    bank = {f: params[f] for f in ("w1", "w3", "w2")}
+    read_buf = params.get("read_buf")
+    if (
+        read_buf is not None
+        and ctx.cfg.mode == PCM_PROGRAMMED
+        and ctx.cfg.resample_read_noise
+        and ctx.key is not None
+    ):
+        for fam in bank:
+            bank[fam] = engine_lib.resample_read(
+                ctx.next_key(), read_buf[fam]
+            ).astype(params[fam].dtype)
 
     def one_expert(w1, w3, w2, clip1, clip3, clip2, s, xe):
         h1 = analog_matmul(
@@ -70,6 +95,7 @@ def _expert_ffn(params: dict, x: Array, ctx: AnalogCtx, dtype) -> Array:
             w_max=clip1[1],
             ctx=ctx,
             out_scale=s[0],
+            b_adc=b_adc,
         )
         h3 = analog_matmul(
             xe,
@@ -79,6 +105,7 @@ def _expert_ffn(params: dict, x: Array, ctx: AnalogCtx, dtype) -> Array:
             w_max=clip3[1],
             ctx=ctx,
             out_scale=s[1],
+            b_adc=b_adc,
         )
         h = jax.nn.silu(h1) * h3
         return analog_matmul(
@@ -89,11 +116,12 @@ def _expert_ffn(params: dict, x: Array, ctx: AnalogCtx, dtype) -> Array:
             w_max=clip2[1],
             ctx=ctx,
             out_scale=s[2],
+            b_adc=b_adc,
         )
 
     clip = params["w_clip_buf"]
     return jax.vmap(one_expert, in_axes=(0, 0, 0, None, None, None, 1, 0))(
-        params["w1"], params["w3"], params["w2"],
+        bank["w1"], bank["w3"], bank["w2"],
         clip[0], clip[1], clip[2], scales, x
     )
 

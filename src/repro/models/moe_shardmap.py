@@ -58,6 +58,14 @@ def moe_apply_shardmap(
     b, s, m = x.shape
     k = cfg.top_k
     e_loc = e // n_model
+    # static per-bank ADC bitwidth (mixed-precision programs): resolved from
+    # the shape-encoded buffer HERE -- shapes are static, so the int can be
+    # closed over by the shard_map body (unlike the param tracer itself).
+    # Per-MVM read-noise resampling is an einsum-dispatch feature; this path
+    # always executes the program's frozen (bit-exact) read draw.
+    from repro.core import engine as engine_lib
+
+    bank_b_adc = engine_lib.bits_of(params.get("b_adc_buf"))
 
     def local_moe(x_loc, router_w, w1, w3, w2, r_adc, clip_buf, scales, gain_s):
         # x_loc: (b_loc, s, m); expert shards w*: (e_loc, ., .)
@@ -97,7 +105,9 @@ def moe_apply_shardmap(
             "r_adc": r_adc, "w_clip_buf": clip_buf,
             "out_scale_buf": scales,  # per-(family, local expert) GDC
         }
-        ye = moe_lib._expert_ffn(fake, recv[:, None], ctx_local, x_loc.dtype)[:, 0]
+        ye = moe_lib._expert_ffn(
+            fake, recv[:, None], ctx_local, x_loc.dtype, b_adc=bank_b_adc
+        )[:, 0]
 
         # return to senders
         back = ye.reshape(e_loc, n_model, cap, m).transpose(1, 0, 2, 3)

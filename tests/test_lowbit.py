@@ -1,0 +1,389 @@
+"""Low-precision serving (b_adc in {4, 6, 8}) end-to-end.
+
+Covers the mixed-precision program path introduced for the paper's
+bitwidth/efficiency trade (Sec. 7): per-layer b_adc overrides in
+``engine.compile_program`` / ``plan_for``, the bits threading through
+``execute_mvm`` -> fused kernel epilogue / jnp oracle, bitwidths in the
+cim-program v1 artifact, per-MVM read-noise resampling in ``pcm_programmed``
+mode, and the serve launcher's accuracy counters.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.core import engine
+from repro.core import quant as quant_lib
+from repro.core.analog import (
+    AnalogConfig,
+    AnalogCtx,
+    linear_apply,
+    linear_init,
+    refresh_clip_ranges,
+)
+from repro.core.quant import QuantSpec, SUPPORTED_B_ADC
+
+INFER8 = AnalogConfig().infer(b_adc=8, t_seconds=86400.0)
+
+
+def _layer(d_in=1024, d_out=64, seed=0):
+    return refresh_clip_ranges(
+        linear_init(jax.random.PRNGKey(seed), d_in, d_out)
+    )
+
+
+def _ctx(cfg, key=None):
+    return AnalogCtx(cfg=cfg, gain_s=jnp.ones(()), key=key)
+
+
+# ------------------------------------------------------- plan / override API
+
+
+def test_plan_override_sets_bits_and_keeps_dac_relation():
+    for bits in SUPPORTED_B_ADC:
+        plan = engine.plan_for(INFER8, 2048, 128, b_adc=bits)
+        assert plan.spec.b_adc == bits
+        assert plan.spec.b_dac == bits + 1  # Eq. 3
+    # no override: config bits, including training-only widths
+    cfg16 = AnalogConfig().train(b_adc=16)
+    assert engine.plan_for(cfg16, 2048, 128).spec.b_adc == 16
+
+
+def test_plan_override_rejects_unsupported_bits():
+    with pytest.raises(ValueError, match="not a supported"):
+        engine.plan_for(INFER8, 2048, 128, b_adc=5)
+    with pytest.raises(ValueError, match="not a supported"):
+        engine.normalize_b_adc_overrides({"a": 3})
+
+
+def test_resolve_b_adc_patterns_last_match_wins():
+    ov = engine.normalize_b_adc_overrides(
+        {"blocks/*": 4, "blocks/0/attn/wq": 8}
+    )
+    assert engine.resolve_b_adc(ov, "blocks/1/ffn/w1", 6) == 4
+    assert engine.resolve_b_adc(ov, "blocks/0/attn/wq", 6) == 8
+    assert engine.resolve_b_adc(ov, "lm_head", 6) == 6
+
+
+# --------------------------------------------- kernel-vs-oracle parity (4/6)
+
+
+def _assert_quant_parity(y_k, y_r, r, bits, scale=1.0, n_tiles=1):
+    """Kernel and oracle made identical quantization decisions.
+
+    Every ADC code (output / step) must agree EXACTLY -- a disagreement
+    would be an off-grid value or a different rounding decision, i.e. a
+    real low-bit bug. The float outputs themselves are additionally bounded
+    at the ulp level: XLA's interpret backend may fuse the quantizer's
+    dequant multiply into the accumulator (FMA), which can move the digital
+    epilogue by 1-2 ulps without changing any code. A per-tile-quantization
+    bug would show up as at least one full step (step/ulp > 10^5 at 4 bits).
+    """
+    step = (abs(float(r)) + 1e-9) / (2 ** (bits - 1) - 1) * float(scale)
+    yk, yr = np.asarray(y_k, np.float64), np.asarray(y_r, np.float64)
+    np.testing.assert_array_equal(np.round(yk / step), np.round(yr / step))
+    bound = 8 * np.finfo(np.float32).eps * n_tiles * max(
+        1.0, np.abs(yr).max()
+    )
+    assert np.abs(yk - yr).max() <= bound
+
+
+@pytest.mark.parametrize("bits", [4, 6])
+@pytest.mark.parametrize("m,k,n", [(8, 1024, 256), (5, 768, 130)])
+def test_kernel_matches_oracle_single_tile_low_bits(bits, m, k, n):
+    """One physical row tile: fused kernel == jnp oracle, code for code."""
+    from repro.kernels.ops import analog_mvm
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(bits))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * k**-0.5
+    ra, s = jnp.float32(2.0), jnp.float32(1.3)
+    y_k = analog_mvm(x, w, r_adc=ra, r_dac=None, out_scale=s, bits=bits,
+                     interpret=True)
+    y_r = engine.tile_matmul_quant(
+        x, w, ra, QuantSpec(bits, 1.0), 1024, True, None, s
+    )
+    _assert_quant_parity(y_k, y_r, 2.0, bits, scale=1.3)
+
+
+@pytest.mark.parametrize("bits", [4, 6])
+def test_kernel_matches_oracle_multi_tile_low_bits(bits):
+    from repro.kernels.ops import analog_mvm
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(bits))
+    x = jax.random.normal(kx, (7, 2048), jnp.float32)
+    w = jax.random.normal(kw, (2048, 130), jnp.float32) * 2048**-0.5
+    ra = jnp.float32(2.0)
+    y_k = analog_mvm(x, w, r_adc=ra, r_dac=None, bits=bits, interpret=True)
+    y_r = engine.tile_matmul_quant(
+        x, w, ra, QuantSpec(bits, 1.0), 1024, True, None, 1.0
+    )
+    _assert_quant_parity(y_k, y_r, 2.0, bits, n_tiles=2)
+
+
+@pytest.mark.parametrize("bits", [4, 6])
+def test_execute_mvm_threads_plan_bits_to_both_backends(bits):
+    """plan_for(b_adc=...) -> execute_mvm: kernel and oracle agree code for
+    code and actually quantize at the overridden width (coarser grid)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 128), jnp.float32)
+    w = w * 512**-0.5
+    ra = jnp.float32(1.5)
+    cfg_ker = dataclasses.replace(INFER8, use_kernel=True, interpret=True)
+    plan_ref = engine.plan_for(INFER8, 512, 128, b_adc=bits)
+    plan_ker = engine.plan_for(cfg_ker, 512, 128, b_adc=bits)
+    y_r = engine.execute_mvm(x, w, ra, plan_ref, out_scale=jnp.float32(1.1))
+    y_k = engine.execute_mvm(x, w, ra, plan_ker, out_scale=jnp.float32(1.1))
+    _assert_quant_parity(y_k, y_r, 1.5, bits, scale=1.1)
+    # the override really coarsens the grid vs the 8-bit plan
+    y_8 = engine.execute_mvm(
+        x, w, ra, engine.plan_for(INFER8, 512, 128), out_scale=jnp.float32(1.1)
+    )
+    n_levels = len(np.unique(np.asarray(y_r)))
+    assert n_levels <= 2 ** bits  # single tile: at most 2^b - 1 grid points
+    assert n_levels < len(np.unique(np.asarray(y_8)))
+
+
+# --------------------------------------------------- mixed-precision programs
+
+
+def test_compile_program_mixed_precision_plans_and_bufs():
+    params = {"a": _layer(seed=0), "b": _layer(seed=1)}
+    prog = engine.compile_program(
+        params, INFER8, jax.random.PRNGKey(7), b_adc_overrides={"a": 4}
+    )
+    assert prog.plans["a"].spec.b_adc == 4
+    assert prog.plans["a"].spec.b_dac == 5
+    assert prog.plans["b"].spec.b_adc == 8
+    assert prog.params["a"]["b_adc_buf"].shape == (4,)
+    assert "b_adc_buf" not in prog.params["b"]
+
+
+def test_mixed_precision_execute_uses_per_layer_bits():
+    params = {"a": _layer(seed=0), "b": _layer(seed=1)}
+    prog = engine.compile_program(
+        params, INFER8, jax.random.PRNGKey(7), b_adc_overrides={"a": 4}
+    )
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 1024))
+    ctx = _ctx(prog.cfg)
+    y_a = linear_apply(prog.params["a"], x, ctx)
+    # oracle at 4 bits on the same programmed weights == the layer output
+    pa = prog.params["a"]
+    x_q = quant_lib.dac_quantize(  # DAC at 5 bits (= b_adc + 1, Eq. 3)
+        x, pa["r_adc"], jnp.ones(()), pa["w_clip_buf"][..., 1],
+        QuantSpec(4, 1.0), None,
+    ).astype(x.dtype)
+    y_ref = engine.tile_matmul_quant(
+        x_q, pa["w"], pa["r_adc"], QuantSpec(4, 1.0), prog.cfg.tile_rows,
+        True, None, pa["out_scale_buf"],
+    )
+    np.testing.assert_array_equal(np.asarray(y_a), np.asarray(y_ref))
+    # a program compiled uniformly at 8 bits gives a different 'a' output
+    prog8 = engine.compile_program(params, INFER8, jax.random.PRNGKey(7))
+    y_a8 = linear_apply(prog8.params["a"], x, _ctx(prog8.cfg))
+    assert (np.asarray(y_a) != np.asarray(y_a8)).any()
+    # ...but 'b' (no override) is bit-identical between the two programs
+    y_b = linear_apply(prog.params["b"], x, ctx)
+    y_b8 = linear_apply(prog8.params["b"], x, _ctx(prog8.cfg))
+    np.testing.assert_array_equal(np.asarray(y_b), np.asarray(y_b8))
+
+
+def test_lm_program_with_scanned_block_overrides():
+    """Scanned LM stacks: the b_adc_buf gets the stack dim so lax.scan and
+    per-group slicing see a consistent leading axis; the head keeps 8."""
+    from repro import configs
+    from repro.models import lm
+
+    cfg = configs.get_smoke("tinyllama-1.1b")
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    prog = engine.compile_program(
+        params, INFER8, jax.random.PRNGKey(1),
+        b_adc_overrides={"blocks/*": 4},
+    )
+    blk_paths = [p for p in prog.plans if p.startswith("blocks/")]
+    assert blk_paths
+    assert all(prog.plans[p].spec.b_adc == 4 for p in blk_paths)
+    assert prog.plans["lm_head"].spec.b_adc == 8
+    # stacked buffer: (n_groups, bits)
+    wq = prog.params.blocks[0]["attn"]["wq"]
+    assert wq["b_adc_buf"].shape[-1] == 4
+    assert wq["b_adc_buf"].shape[0] == wq["w"].shape[0]
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32)}
+    logits, _ = lm.lm_forward(prog.params, batch, prog.cfg, cfg)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_moe_bank_override_applies_to_all_families():
+    from repro.models import moe as moe_lib
+    from repro.models.common import ModelConfig
+
+    cfg = ModelConfig(family="moe", n_experts=4, top_k=2, d_model=32,
+                      d_ff=64, capacity_factor=8.0, moe_groups=2)
+    params = {"moe": moe_lib.moe_init(jax.random.PRNGKey(0), cfg)}
+    prog = engine.compile_program(
+        params, INFER8, jax.random.PRNGKey(1), b_adc_overrides={"moe": 6}
+    )
+    for fam in ("w1", "w3", "w2"):
+        assert prog.plans[f"moe/{fam}"].spec.b_adc == 6
+    assert prog.params["moe"]["b_adc_buf"].shape == (4, 6)  # (E, bits)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 32))
+    y = moe_lib.moe_apply(prog.params["moe"], x, _ctx(prog.cfg), cfg)
+    assert bool(jnp.isfinite(y).all())
+
+
+# ----------------------------------------------------------------- artifacts
+
+
+def test_artifact_roundtrip_preserves_bitwidths(tmp_path):
+    params = {"a": _layer(seed=0), "b": _layer(seed=1)}
+    prog = engine.compile_program(
+        params, INFER8, jax.random.PRNGKey(7), b_adc_overrides={"a": 4}
+    )
+    path = store.save_program(str(tmp_path / "prog"), prog)
+    loaded = store.load_program(path)
+    assert loaded.plans["a"].spec.b_adc == 4
+    assert loaded.plans["b"].spec.b_adc == 8
+    assert loaded.params["a"]["b_adc_buf"].shape == (4,)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 1024))
+    y0 = linear_apply(prog.params["a"], x, _ctx(prog.cfg))
+    y1 = linear_apply(loaded.params["a"], x, _ctx(loaded.cfg))
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_artifact_legacy_two_entry_plans_still_load(tmp_path):
+    """v1 artifacts from before mixed precision stored plans as [K, N]."""
+    prog = engine.compile_program(
+        {"a": _layer(seed=0)}, INFER8, jax.random.PRNGKey(7)
+    )
+    path = store.save_program(str(tmp_path / "prog"), prog)
+    meta_path = os.path.join(path, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["plans"] = {p: e[:2] for p, e in meta["plans"].items()}
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    loaded = store.load_program(path)
+    assert loaded.plans["a"].spec.b_adc == loaded.cfg.b_adc == 8
+
+
+def test_artifact_rejects_bad_stored_bits(tmp_path):
+    prog = engine.compile_program(
+        {"a": _layer(seed=0)}, INFER8, jax.random.PRNGKey(7)
+    )
+    path = store.save_program(str(tmp_path / "prog"), prog)
+    meta_path = os.path.join(path, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["plans"]["a"] = [meta["plans"]["a"][0], meta["plans"]["a"][1], 5]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="not a supported"):
+        store.load_program(path)
+    meta["plans"]["a"] = [1024]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="malformed quant plan"):
+        store.load_program(path)
+
+
+# --------------------------------------------------- per-MVM read resampling
+
+
+def _resample_cfg():
+    return AnalogConfig().infer(
+        b_adc=8, t_seconds=86400.0, resample_read_noise=True
+    )
+
+
+def test_resample_read_noise_default_stays_bit_exact():
+    """Without an RNG the frozen read draw executes: same output as a
+    program compiled without the flag (the ROADMAP bit-exactness contract)."""
+    p = {"a": _layer(seed=0)}
+    prog_r = engine.compile_program(p, _resample_cfg(), jax.random.PRNGKey(7))
+    prog_p = engine.compile_program(p, INFER8, jax.random.PRNGKey(7))
+    assert set(prog_r.params["a"]["read_buf"]) == {
+        "g_pos", "g_neg", "sigma_pos", "sigma_neg", "w_scale"
+    }
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 1024))
+    y_r = linear_apply(prog_r.params["a"], x, _ctx(prog_r.cfg))
+    y_p = linear_apply(prog_p.params["a"], x, _ctx(prog_p.cfg))
+    np.testing.assert_array_equal(np.asarray(y_r), np.asarray(y_p))
+
+
+def test_resample_read_noise_draws_fresh_per_key():
+    p = {"a": _layer(seed=0)}
+    prog = engine.compile_program(p, _resample_cfg(), jax.random.PRNGKey(7))
+    assert prog.cfg.needs_rng  # serving passes an RNG per step
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 1024))
+    y1 = linear_apply(prog.params["a"], x, _ctx(prog.cfg, jax.random.PRNGKey(3)))
+    y2 = linear_apply(prog.params["a"], x, _ctx(prog.cfg, jax.random.PRNGKey(4)))
+    y1b = linear_apply(prog.params["a"], x, _ctx(prog.cfg, jax.random.PRNGKey(3)))
+    assert (np.asarray(y1) != np.asarray(y2)).any()  # fresh noise per call
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y1b))
+
+
+def test_resample_read_buffers_follow_drift():
+    """drift_to rebuilds the pre-read buffers at the new chip age: the
+    drifted conductances shrink and the 1/f sigma grows with t."""
+    p = {"a": _layer(seed=0)}
+    prog = engine.compile_program(p, _resample_cfg(), jax.random.PRNGKey(7))
+    aged = prog.drift_to(365 * 86400.0)
+    b0 = prog.params["a"]["read_buf"]
+    b1 = aged.params["a"]["read_buf"]
+    assert float(jnp.sum(b1["g_pos"])) < float(jnp.sum(b0["g_pos"]))
+    assert float(jnp.mean(b1["sigma_pos"])) > 0.0
+    assert (np.asarray(b1["sigma_pos"]) != np.asarray(b0["sigma_pos"])).any()
+
+
+def test_moe_bank_resample_read_noise():
+    from repro.models import moe as moe_lib
+    from repro.models.common import ModelConfig
+
+    cfg = ModelConfig(family="moe", n_experts=4, top_k=2, d_model=32,
+                      d_ff=64, capacity_factor=8.0, moe_groups=2)
+    params = {"moe": moe_lib.moe_init(jax.random.PRNGKey(0), cfg)}
+    prog = engine.compile_program(
+        params, _resample_cfg(), jax.random.PRNGKey(1)
+    )
+    assert set(prog.params["moe"]["read_buf"]) == {"w1", "w3", "w2"}
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 32))
+    y0 = moe_lib.moe_apply(prog.params["moe"], x, _ctx(prog.cfg), cfg)
+    y1 = moe_lib.moe_apply(
+        prog.params["moe"], x, _ctx(prog.cfg, jax.random.PRNGKey(5)), cfg
+    )
+    y0b = moe_lib.moe_apply(prog.params["moe"], x, _ctx(prog.cfg), cfg)
+    assert (np.asarray(y0) != np.asarray(y1)).any()
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y0b))
+
+
+# -------------------------------------------------------------- serve smoke
+
+
+def test_serve_smoke_emits_finite_accuracy_counters(monkeypatch, capsys):
+    from repro.launch import serve
+
+    monkeypatch.setattr(
+        "sys.argv",
+        ["serve", "--analog", "--b-adc", "4", "--batch", "1",
+         "--prompt-len", "4", "--tokens", "3"],
+    )
+    serve.main()
+    out = capsys.readouterr().out
+    line = [l for l in out.splitlines()
+            if l.startswith("accuracy_vs_digital_ref:")]
+    assert len(line) == 1, out
+    fields = dict(
+        kv.split("=") for kv in line[0].split(": ", 1)[1].split()
+    )
+    agree = float(fields["top1_agreement"])
+    mse = float(fields["logit_mse"])
+    assert np.isfinite(agree) and 0.0 <= agree <= 1.0
+    assert np.isfinite(mse) and mse >= 0.0
+    assert int(fields["decisions"]) == 3  # prefill + 2 decode steps
+    assert "b_adc=4" in out
