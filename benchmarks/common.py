@@ -154,17 +154,17 @@ def eval_accuracy(
     n_batches: int = 4,
     n_draws: int = 3,
     seed: int = 123,
-    program_once: bool = True,
 ) -> tuple[float, float]:
     """(mean, std) accuracy over PCM noise draws (paper uses 25 runs).
 
-    With ``program_once`` (default) each PCM draw programs one simulated
-    chip via ``engine.compile_program`` and evaluates every batch against
-    those frozen conductances -- the paper's N-chips protocol and the
-    deployment lifecycle. Note the 1/f read noise is frozen with them (one
-    realization per chip, bit-exact executes); for i.i.d. per-forward read
-    noise pass ``program_once=False``, which re-simulates the full PCM
-    chain (including programming) inside every forward call.
+    Each PCM draw programs one simulated chip via ``engine.compile_program``
+    and evaluates every batch against those frozen conductances -- the
+    paper's N-chips protocol and the deployment lifecycle. The 1/f read
+    noise is frozen with them (one realization per chip, bit-exact
+    executes); per-MVM read-noise resampling is the programmed engine's
+    ``AnalogConfig(resample_read_noise=True)`` -- the legacy path that
+    re-simulated the whole PCM chain inside every forward call is gone.
+    Non-PCM configs (digital / analog_train) evaluate directly.
     """
     from repro.core import engine
     from repro.models.analognet import crossbar_transforms
@@ -172,7 +172,7 @@ def eval_accuracy(
     accs = []
     for d in range(n_draws):
         rng = jax.random.PRNGKey(seed + d)
-        if analog_cfg.mode == "pcm_infer" and program_once:
+        if analog_cfg.mode == "pcm_infer":
             program = engine.compile_program(
                 params, analog_cfg, rng, transforms=crossbar_transforms(cfg)
             )

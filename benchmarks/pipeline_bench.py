@@ -49,7 +49,73 @@ def _serving_rows(fast: bool) -> list[str]:
                 f"program_once_speedup={us_percall / max(us_prog, 1e-9):.2f}x"),
     ]
     rows.extend(_bitwidth_sweep_rows(params, cfg, iters))
+    rows.append(_drift_lifecycle_row(cfg, fast))
     return rows
+
+
+def _drift_lifecycle_row(cfg, fast: bool) -> str:
+    """serve_drift_24h: the paper's accuracy-after-24h claim on the exact
+    serving artifact.
+
+    A briefly-trained model (trained logit margins -- a random net's
+    near-tie argmax makes agreement meaningless) is programmed into N
+    chips at t = 25 s; each chip then ages to 24 h in place
+    (engine.age_program: drift-only re-evaluation -- the program-event
+    counter delta is part of the row and must be 0). Top-1 agreement vs
+    the digital forward on a held-out task batch is read at both ages; the
+    tracked claim is that the mean agreement at 24 h degrades by no more
+    than 2 points relative to 25 s (paper Fig. 7 / Table 1; GDC does the
+    work). Empirically the 24 h agreement is slightly *higher*: the drift
+    factor (~0.61 mean at 24 h) shrinks bitline sums below the fixed ADC
+    clip range, trading saturation for resolution before GDC re-amplifies
+    digitally.
+    """
+    from benchmarks.common import pipe_for, train_model
+    from repro.data.pipeline import batch_at
+
+    params = train_model(cfg, stage1=60, stage2=60, eta=0.1, b_adc=8)
+    pipe = pipe_for(cfg)
+    xp = jnp.concatenate([
+        jnp.asarray(batch_at(pipe, 50_000 + i)["x"]) for i in range(16)
+    ])
+    ref = jnp.argmax(cnn_apply(params, xp, AnalogConfig(), cfg), axis=-1)
+    acfg = AnalogConfig().infer(b_adc=8, t_seconds=25.0)
+    transforms = crossbar_transforms(cfg)
+    n_chips = 4 if fast else 8
+    run = None
+    a25, a24 = [], []
+    us = 0.0
+    delta = 0  # program events during any chip's age/eval window: must be 0
+    for c in range(n_chips):
+        prog = engine.compile_program(
+            params, acfg, jax.random.PRNGKey(c), transforms=transforms
+        )
+        events0 = engine.program_event_count()
+        if run is None:
+            run = jax.jit(lambda p, x, _c=prog.cfg: cnn_apply(p, x, _c, cfg))
+
+        def agreement(p) -> float:
+            return float(jnp.mean(
+                (jnp.argmax(run(p, xp), axis=-1) == ref).astype(jnp.float32)
+            ))
+
+        a25.append(agreement(prog.params))
+        aged = engine.age_program(prog, 86400.0)
+        a24.append(agreement(aged.params))
+        if c == n_chips - 1:
+            us = time_call(run, aged.params, xp, iters=3)
+        delta += engine.program_event_count() - events0
+    # the row's invariant, enforced: aging/eval must never reprogram (an
+    # assert turns a regression into an _ERROR row, which the nightly
+    # --require gate fails on)
+    assert delta == 0, f"drift aging reprogrammed the chip ({delta} events)"
+    m25 = sum(a25) / len(a25)
+    m24 = sum(a24) / len(a24)
+    return csv_row(
+        "serve_drift_24h", us,
+        f"top1_t25s={m25:.4f}_top1_t24h={m24:.4f}"
+        f"_drop={m25 - m24:.4f}_chips={n_chips}_program_events={delta}",
+    )
 
 
 def _bitwidth_sweep_rows(params, cfg, iters: int) -> list[str]:

@@ -5,7 +5,10 @@ Prints ``name,us_per_call,derived`` CSV rows. Default budgets are reduced
 filters benchmarks. ``--json PATH`` additionally writes the rows as a JSON
 document (with commit/timestamp metadata when available) -- the nightly CI
 workflow uploads it as an artifact so the perf trajectory is recorded
-per-commit.
+per-commit. ``--require name1,name2`` exits non-zero unless every named
+row was produced (and no suite errored out from under it) -- the nightly
+gate that keeps tracked rows (program-once speedup, bitwidth sweep,
+serve_drift_24h) from silently disappearing.
 """
 
 from __future__ import annotations
@@ -32,6 +35,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (for CI artifacts)")
+    ap.add_argument("--require", default=None, metavar="NAMES",
+                    help="comma list of row names that must be present; "
+                         "exit 1 if any is missing or any suite errored")
     args = ap.parse_args()
     fast = not args.full
 
@@ -88,6 +94,16 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"wrote {len(records)} rows to {args.json}", file=sys.stderr)
+
+    if args.require:
+        names = {r["name"] for r in records}
+        need = {n.strip() for n in args.require.split(",") if n.strip()}
+        missing = sorted(need - names)
+        errored = sorted(n for n in names if n.endswith("_ERROR"))
+        if missing or errored:
+            print(f"required bench rows missing: {missing}; "
+                  f"errored suites: {errored}", file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

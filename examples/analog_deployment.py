@@ -77,26 +77,39 @@ def main() -> None:
     same_chip = all(
         np.array_equal(np.asarray(a), np.asarray(b))
         for a, b in zip(
-            jax.tree.leaves(programs[8][0].drift_to(86400.0).params),
-            jax.tree.leaves(reloaded.drift_to(86400.0).params),
+            jax.tree.leaves(engine.age_program(programs[8][0], 86400.0).params),
+            jax.tree.leaves(engine.age_program(reloaded, 86400.0).params),
         )
     )
     acc = common.eval_program_accuracy(
-        reloaded.drift_to(86400.0), common.KWS_BENCH)
+        engine.age_program(reloaded, 86400.0), common.KWS_BENCH)
     print(f"artifact at {pdir}: drifted params "
           f"{'BIT-IDENTICAL to the original chip' if same_chip else 'MISMATCH'}"
           f"; reloaded-chip accuracy @1d = {acc:.3f}")
+    # Each chip ages IN PLACE along the Fig. 7 schedule (age_program: the
+    # same devices re-evaluated, never reprogrammed, trajectory recorded in
+    # age_history) -- drift transitivity makes the sequential walk
+    # bit-identical to jumping straight to any age.
+    schedule = engine.DriftSchedule.fig7()
     print(f"{'time':>6} " + " ".join(f"{b}-bit" for b in models))
-    for tname, t in [("25s", 25.0), ("1h", 3600.0), ("1d", 86400.0),
-                     ("1mo", 2.6e6), ("1y", 3.15e7)]:
+    for tname, t in zip(schedule.labels, schedule.times):
         accs = []
         for bits in models:
-            chip_accs = [
-                common.eval_program_accuracy(p.drift_to(t), common.KWS_BENCH)
-                for p in programs[bits]
-            ]
+            chip_accs = []
+            for c, p in enumerate(programs[bits]):
+                if t != p.t_seconds:
+                    programs[bits][c] = p = engine.age_program(p, t)
+                chip_accs.append(
+                    common.eval_program_accuracy(p, common.KWS_BENCH)
+                )
             accs.append(float(np.mean(chip_accs)))
         print(f"{tname:>6} " + " ".join(f"{a:.3f}" for a in accs))
+    hist = ",".join(f"{t:.0f}s" for t in programs[8][0].age_history)
+    print(f"chip-0 age_history after the sweep: {hist}")
+    # CLI equivalent (ages one served chip in place, with per-age accuracy
+    # counters and an optional --refresh-below reprogramming policy):
+    #   python -m repro.launch.serve --analog --drift-schedule fig7 \
+    #       --refresh-below 0.85
 
     print("\n== mixed-precision program: 4-bit body, 8-bit classifier ==")
     # Per-layer b_adc overrides (PR 3): the body serves at 4 bits for the

@@ -174,8 +174,9 @@ def gc_old(ckpt_dir: str, keep: int = 3) -> None:
 #                    # read-noise Q factors, per-member weight scales,
 #                    # det-summed GDC numerators, layer RNG keys)
 #       meta.json    # format tag, version, drift timestamp t_seconds,
-#                    # AnalogConfig (incl. PCMConfig), per-layer quant plans
-#                    # as (K, N), optional physical-array mapping
+#                    # optional age_history drift trajectory, AnalogConfig
+#                    # (incl. PCMConfig), per-layer quant plans as (K, N),
+#                    # optional physical-array mapping
 #       COMMIT       # written last: presence marks a complete artifact
 #
 # Restore rebuilds the execution plans from (cfg, K, N) -- plans are pure
@@ -206,6 +207,10 @@ def save_program(path: str, program, *, extra_meta: Optional[dict] = None) -> st
         "format": PROGRAM_FORMAT,
         "version": PROGRAM_VERSION,
         "t_seconds": program.t_seconds,
+        # drift trajectory (optional, v1-compatible): every age this chip
+        # was evaluated at; older loaders ignore it, older artifacts load
+        # with the single stored t_seconds as their history
+        "age_history": [float(t) for t in program.age_history],
         "cfg": dataclasses.asdict(program.cfg),
         # per-layer quant plans: geometry + the ADC bitwidth the layer was
         # compiled at (mixed-precision programs record a bitwidth per path)
@@ -413,6 +418,11 @@ def load_program(path: str, params_like: Any = None, *, shardings: Any = None):
         state=state,
         plans=plans,
         mapping=mapping,
+        # pre-age_history artifacts know only their final age
+        age_history=tuple(
+            float(t)
+            for t in meta.get("age_history", [meta["t_seconds"]])
+        ),
     )
 
 

@@ -685,6 +685,138 @@ def _walk(tree: Any, fn: Callable[[str, dict], dict], path: str = "") -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Drift lifecycle: schedules of chip ages + the aging entry point
+#
+# A deployed chip is programmed once and then *ages in place*: drift and read
+# noise evolve on a log-time scale while the programmed state stays frozen.
+# DriftSchedule captures the sequence of wall-clock ages a serving deployment
+# re-evaluates the chip at (paper Fig. 7: 25s -> 1h -> 1d -> 1mo -> 1y);
+# age_program advances ONE CiMProgram along it without any reprogramming,
+# recording the trajectory in the program's age_history.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSchedule:
+    """A monotone sequence of chip ages (seconds) to serve a program at."""
+
+    times: tuple[float, ...]
+
+    def __post_init__(self):
+        ts = tuple(float(t) for t in self.times)
+        if not ts:
+            raise ValueError("DriftSchedule needs at least one age")
+        if not all(math.isfinite(t) for t in ts):
+            # NaN compares False everywhere, so it would sail through the
+            # ordering and t_c checks and poison the whole PCM chain
+            raise ValueError(f"DriftSchedule ages must be finite: {ts}")
+        if any(b <= a for a, b in zip(ts, ts[1:])):
+            raise ValueError(
+                f"DriftSchedule ages must be strictly increasing: {ts}"
+            )
+        if ts[0] < pcm_lib.T_C:
+            # the drift law (t/t_c)^-nu is defined from the programming
+            # reference age onward; ages below it would be silently clamped
+            # (identical chips under different labels) or, for t <= 0, feed
+            # NaNs into the read-noise scale
+            raise ValueError(
+                f"DriftSchedule ages must be >= t_c = {pcm_lib.T_C}s (the "
+                f"drift law's programming reference age): {ts}"
+            )
+        object.__setattr__(self, "times", ts)
+
+    def __iter__(self):
+        return iter(self.times)
+
+    def __len__(self) -> int:
+        return len(self.times)
+
+    @property
+    def labels(self) -> tuple[str, ...]:
+        return tuple(pcm_lib.format_age(t) for t in self.times)
+
+    @classmethod
+    def fig7(cls) -> "DriftSchedule":
+        """The paper's Fig. 7 ages: 25s, 1h, 1d, 1mo, 1y."""
+        return cls(tuple(pcm_lib.FIG7_TIMES.values()))
+
+    @classmethod
+    def log_spaced(cls, t_start: float, t_end: float, n: int) -> "DriftSchedule":
+        """``n`` log-spaced ages in [max(t_start, t_c), t_end]."""
+        return cls(pcm_lib.log_spaced_times(t_start, t_end, n))
+
+    @classmethod
+    def parse(cls, text: str) -> "DriftSchedule":
+        """Parse a CLI schedule: 'fig7' or a comma list of seconds.
+
+        ``'25,3600,86400'`` -> ages 25s, 1h, 1d.
+        """
+        text = text.strip()
+        if text.lower() == "fig7":
+            return cls.fig7()
+        try:
+            times = tuple(float(x) for x in text.split(",") if x.strip())
+        except ValueError as e:
+            raise ValueError(
+                f"bad drift schedule {text!r}: want 'fig7' or a comma "
+                "list of seconds, e.g. '25,3600,86400'"
+            ) from e
+        return cls(times)
+
+
+def plan_bit_overrides(program: "CiMProgram") -> dict[str, int]:
+    """Recover the per-layer ``b_adc_overrides`` a program was compiled with.
+
+    Reprogramming a chip (the serve-time refresh policy) must reproduce the
+    same mixed-precision configuration, but a loaded artifact only carries
+    the resulting per-layer plans. Bitwidths are read back from the plans:
+    exact layer paths for linear layers, plus the parent (bank) path for MoE
+    expert-bank families -- bank nodes match overrides by the *bank* path
+    while their plans are stored per family (``.../w1`` etc.). The extra
+    parent patterns are harmless for non-bank parents: plain dict parents
+    are never themselves walked as analog nodes.
+    """
+    default = program.cfg.b_adc
+    out = {
+        p: plan.spec.b_adc
+        for p, plan in program.plans.items()
+        if plan.spec.b_adc != default
+    }
+    for p, bits in list(out.items()):
+        head, _, fam = p.rpartition("/")
+        if head and fam in _MOE_FAMILIES and head not in program.plans:
+            if all(out.get(f"{head}/{f}") == bits for f in _MOE_FAMILIES):
+                out[head] = bits
+    return out
+
+
+def age_program(program: "CiMProgram", t_seconds: float) -> "CiMProgram":
+    """Advance a programmed chip to age ``t_seconds`` -- never reprograms.
+
+    The drift-lifecycle entry point: re-evaluates the same programmed
+    conductances via the jitted, sharding-preserving :meth:`CiMProgram.
+    drift_to` (programming noise, per-layer ``b_adc_buf`` bitwidths, and --
+    when compiled with ``resample_read_noise`` -- the ``read_buf`` contract
+    all stay coherent) and appends the new age to the program's
+    ``age_history`` so a saved artifact remembers its drift trajectory.
+    Guarded by the trace-time programming counter: aging a chip must add
+    zero programming events.
+    """
+    before = program_event_count()
+    aged = program.drift_to(t_seconds)
+    after = program_event_count()
+    if after != before:
+        raise RuntimeError(
+            f"age_program reprogrammed the chip ({after - before} "
+            "programming events during drift_to) -- drift must only "
+            "re-evaluate the frozen devices"
+        )
+    return dataclasses.replace(
+        aged, age_history=program.age_history + (float(t_seconds),)
+    )
+
+
+# ---------------------------------------------------------------------------
 # CiMProgram
 # ---------------------------------------------------------------------------
 
@@ -707,6 +839,12 @@ class CiMProgram:
     state: dict[str, Any]
     plans: dict[str, ExecutionPlan]
     mapping: Optional[Mapping] = None
+    #: drift trajectory: every age this chip has been evaluated at, starting
+    #: with the programming-time evaluation. :func:`age_program` appends;
+    #: the artifact stores it (optional ``age_history`` meta, v1-compatible)
+    #: so a reloaded chip knows how it was aged. ``drift_to`` itself is a
+    #: stateless primitive and does not record.
+    age_history: tuple[float, ...] = ()
 
     @property
     def n_layers(self) -> int:
@@ -963,4 +1101,5 @@ def compile_program(
         state=state,
         plans=plans,
         mapping=mapping,
+        age_history=(t,),
     )

@@ -31,6 +31,7 @@ element-wise and sharding-commutative).
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +41,56 @@ Array = jax.Array
 G_MAX_US = 25.0  # uS, maximal device conductance (paper Appendix C)
 T_C = 25.0  # s, reference time of programming for the drift law
 T_READ = 250e-9  # s, read-noise reference time
+
+#: The paper's Fig. 7 evaluation ages (log-spaced deployment lifetimes).
+#: Drift is a log-time phenomenon -- accuracy is read out at 25 s (= t_c,
+#: drift factor exactly 1), one hour, one day, one month, one year. This is
+#: the canonical serving drift schedule; ``engine.DriftSchedule.fig7()``
+#: wraps it for the drift-lifecycle subsystem.
+FIG7_TIMES: dict[str, float] = {
+    "25s": T_C,
+    "1h": 3600.0,
+    "1d": 86400.0,
+    "1mo": 30 * 86400.0,
+    "1y": 365 * 86400.0,
+}
+
+
+def log_spaced_times(t_start: float, t_end: float, n: int) -> tuple[float, ...]:
+    """Up to ``n`` log-spaced chip ages in [t_start, t_end] (drift is
+    log-time), strictly increasing.
+
+    ``t_start`` is floored at ``T_C``: the drift law (t/t_c)^-nu is defined
+    from the programming reference time onward. Endpoints are exact (no
+    exp(log(t)) round-trip drift) and degenerate ranges collapse to fewer
+    points, so the result always forms a valid DriftSchedule.
+    """
+    if n < 1:
+        raise ValueError(f"need at least one checkpoint, got n={n}")
+    t0 = max(float(t_start), T_C)
+    t1 = max(float(t_end), t0)
+    if n == 1 or t1 == t0:
+        return (t1,)
+    la, lb = math.log(t0), math.log(t1)
+    ts = [math.exp(la + (lb - la) * i / (n - 1)) for i in range(n)]
+    ts[0], ts[-1] = t0, t1
+    out: list[float] = []
+    for t in ts:
+        if not out or t > out[-1]:
+            out.append(t)
+    return tuple(out)
+
+
+def format_age(t_seconds: float) -> str:
+    """Human label for a chip age: 25s, 1h, 1d, 1mo, 1y, 2.5d, ..."""
+    for unit, sec in (("y", 365 * 86400.0), ("mo", 30 * 86400.0),
+                      ("d", 86400.0), ("h", 3600.0), ("min", 60.0)):
+        # 2% tolerance: 3.15e7 s (the paper's "1 year") labels as 1y
+        if t_seconds >= sec * 0.98:
+            v = t_seconds / sec
+            return f"{v:.0f}{unit}" if abs(v - round(v)) < 5e-3 else f"{v:.1f}{unit}"
+    return (f"{t_seconds:.0f}s" if abs(t_seconds - round(t_seconds)) < 5e-3
+            else f"{t_seconds:.1f}s")
 
 
 @dataclasses.dataclass(frozen=True)

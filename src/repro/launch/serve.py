@@ -31,12 +31,28 @@ also reports accuracy counters -- greedy top-1 agreement and logit MSE
 against the digital full-precision reference, teacher-forced on the analog
 token stream -- so the throughput/accuracy trade is a printed number
 (``--no-ref-check`` skips the reference pass).
+
+Drift-lifecycle serving: ``--drift-schedule 25,3600,86400`` (or ``fig7``,
+the paper's 25s/1h/1d/1mo/1y grid) serves ONE programmed chip at every age
+of the schedule -- the chip ages in place via ``engine.age_program``
+(jitted, sharding-preserving drift re-evaluation; zero reprogramming,
+asserted through the program-event counter) and the accuracy counters are
+re-emitted per age, reproducing the paper's headline accuracy-after-24h
+claim on the exact serving artifact. ``--refresh-below 0.9`` arms the
+refresh policy: when top-1 agreement at some age degrades past the
+threshold, the chip is reprogrammed from the stored source weights
+(``steps.refresh_program``: fresh write noise, drift clock reset to t_c, a
+logged ``reprogram`` event) and the remaining schedule serves the fresh
+chip. ``--save-program`` after a schedule persists the final aged chip with
+its full ``age_history``, so a reloaded artifact serves bit-exactly at the
+last age.
 """
 
 from __future__ import annotations
 
 import argparse
 import math
+import sys
 import time
 
 import jax
@@ -44,7 +60,10 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.checkpoint import store
+from repro.core import engine
+from repro.core import pcm as pcm_lib
 from repro.core.analog import AnalogConfig
+from repro.core.engine import DriftSchedule
 from repro.core.quant import SUPPORTED_B_ADC
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps
@@ -82,6 +101,18 @@ def main() -> None:
                     help="legacy: re-simulate PCM programming every forward")
     ap.add_argument("--t-hours", type=float, default=24.0,
                     help="PCM drift time for --analog")
+    ap.add_argument("--drift-schedule", default=None, metavar="SPEC",
+                    help="drift-lifecycle serving: age ONE programmed chip "
+                         "across these ages (comma list of seconds, or "
+                         "'fig7' for the paper's 25s/1h/1d/1mo/1y grid) and "
+                         "re-emit the accuracy counters at each age; "
+                         "overrides --t-hours")
+    ap.add_argument("--refresh-below", type=float, default=None, metavar="X",
+                    help="refresh policy: reprogram the chip from the "
+                         "stored source weights (fresh write noise, age "
+                         "resets to t_c) when top-1 agreement at an age of "
+                         "the --drift-schedule drops below X; logs a "
+                         "'reprogram' event")
     ap.add_argument("--b-adc", type=int, default=None,
                     choices=list(SUPPORTED_B_ADC),
                     help="ADC bitwidth for analog serving (default 8); with "
@@ -124,6 +155,34 @@ def main() -> None:
     ):
         ap.error("--resample-read-noise needs a compiled program "
                  "(--analog or --load-program, without --per-call)")
+    if args.drift_schedule and args.per_call:
+        ap.error("--drift-schedule ages a compiled program in place "
+                 "(no --per-call)")
+    if args.drift_schedule and not (args.analog or args.load_program):
+        ap.error("--drift-schedule needs a compiled program "
+                 "(--analog or --load-program)")
+    if args.refresh_below is not None and not args.drift_schedule:
+        ap.error("--refresh-below is the --drift-schedule refresh policy "
+                 "(pass both)")
+    if args.refresh_below is not None and args.no_ref_check:
+        ap.error("--refresh-below triggers on the top-1 agreement counter "
+                 "(drop --no-ref-check)")
+    if args.refresh_below is not None and args.load_program:
+        # the artifact deliberately stores no pre-programming weights (the
+        # chip is the artifact); refresh rewrites from THIS process's
+        # source weights, which is only correct if the artifact was
+        # programmed from the same ones (serve's own deterministic init is
+        # -- but a chip programmed via the API may not be)
+        print("warning: --refresh-below with --load-program reprograms "
+              "from this process's deterministic source weights; if the "
+              "artifact was programmed from different weights, a refresh "
+              "will rewrite a different model", file=sys.stderr)
+    schedule = None
+    if args.drift_schedule:
+        try:
+            schedule = DriftSchedule.parse(args.drift_schedule)
+        except ValueError as e:
+            ap.error(str(e))
     b_adc = 8 if args.b_adc is None else args.b_adc
     overrides = None
     if args.b_adc_overrides:
@@ -134,16 +193,20 @@ def main() -> None:
 
     cfg = configs.get_smoke(args.arch)
     analog = args.analog or args.load_program is not None
+    t0_seconds = (schedule.times[0] if schedule is not None
+                  else args.t_hours * 3600.0)
     acfg = AnalogConfig()
     if analog:
         acfg = AnalogConfig().infer(
-            b_adc=b_adc, t_seconds=args.t_hours * 3600.0,
+            b_adc=b_adc, t_seconds=t0_seconds,
             resample_read_noise=args.resample_read_noise,
         )
 
     key = jax.random.PRNGKey(0)
     params = lm.lm_init(key, cfg)
-    ref_params = params  # digital full-precision reference for counters
+    # pre-programming weights: the digital reference for the accuracy
+    # counters AND the source the refresh policy reprograms the chip from
+    src_params = ref_params = params
 
     mesh = (mesh_lib.make_serving_mesh(args.mesh_model)
             if args.mesh_model else None)
@@ -169,13 +232,16 @@ def main() -> None:
                 "read buffers (compile it with --analog "
                 "--resample-read-noise --save-program)"
             )
-        if program.t_seconds != args.t_hours * 3600.0:
-            # same chip, advanced to the requested deployment age
-            program = program.drift_to(args.t_hours * 3600.0)
+        if program.t_seconds != t0_seconds:
+            # same chip, advanced to the requested deployment age -- through
+            # age_program so the trajectory stays recorded (a later
+            # --save-program must not write a stale age_history)
+            program = engine.age_program(program, t0_seconds)
         where = f" onto {mesh.devices.size}-device mesh" if mesh else ""
         print(f"loaded programmed chip ({program.n_layers} layers, "
               f"b_adc={program.cfg.b_adc}, "
-              f"t={program.t_seconds/3600.0:.0f}h) "
+              f"t={pcm_lib.format_age(program.t_seconds)}, "
+              f"age_history={len(program.age_history)} entries) "
               f"in {time.time()-t0:.2f}s from {args.load_program}{where}")
     elif analog and not args.per_call:
         # Program phase: one pass over the param tree, before any serving.
@@ -188,10 +254,10 @@ def main() -> None:
         mixed = f" with {len(overrides)} bitwidth overrides" if overrides else ""
         print(f"programmed {program.n_layers} analog layers once {where}"
               f"in {time.time()-t0:.2f}s (b_adc={b_adc}{mixed}, "
-              f"t={args.t_hours:.0f}h)")
+              f"t={pcm_lib.format_age(t0_seconds)})")
     if program is not None:
         params, acfg = program.params, program.cfg
-        if args.save_program:
+        if args.save_program and schedule is None:
             path = store.save_program(args.save_program, program)
             print(f"saved programmed chip artifact to {path}")
     if args.use_kernel:
@@ -216,15 +282,6 @@ def main() -> None:
             key, (b, cfg.num_patches, cfg.d_model), cfg.dtype
         )
 
-    cache = init_lm_cache(cfg, b, s_max, cfg.dtype)
-    t0 = time.time()
-    logits, cache = lm.lm_forward(
-        params, batch, acfg, cfg, cache=cache, last_token_only=True,
-        rng=key if needs_rng else None,
-    )
-    cache = unstack_cache(cache)
-    t_prefill = time.time() - t0
-
     @jax.jit
     def decode(params, tokens, cache, rng):
         logits, cache = lm.lm_forward(
@@ -241,8 +298,6 @@ def main() -> None:
     # Counters are running sums (device scalars), not stored logits: the
     # full-vocab logit history would be O(tokens * batch * vocab) host RAM.
     ref_check = analog and not args.no_ref_check
-    agree_sum = err_sum = jnp.zeros((), jnp.float32)
-    n_decisions = n_elems = 0
     if ref_check:
         dig = AnalogConfig()
 
@@ -263,6 +318,16 @@ def main() -> None:
             )
             return agree, jnp.sum((a - r) ** 2)
 
+    def serve_pass(params):
+        """One full prefill + decode pass -> timing/accuracy metrics.
+
+        The jitted decode/ref_decode closures take params as an argument,
+        so serving the same chip at several drift ages (values change,
+        shapes do not) re-traces nothing.
+        """
+        agree_sum = err_sum = jnp.zeros((), jnp.float32)
+        n_decisions = n_elems = 0
+
         def accumulate(a, r):
             nonlocal agree_sum, err_sum, n_decisions, n_elems
             agree, err = count_step(a, r)
@@ -271,40 +336,126 @@ def main() -> None:
             n_decisions += int(math.prod(a.shape[:-1]))
             n_elems += a.size
 
-        ref_cache = init_lm_cache(cfg, b, s_max, cfg.dtype)
-        ref_logit, ref_cache = lm.lm_forward(
-            ref_params, batch, dig, cfg, cache=ref_cache, last_token_only=True
+        cache = init_lm_cache(cfg, b, s_max, cfg.dtype)
+        t0 = time.time()
+        logits, cache = lm.lm_forward(
+            params, batch, acfg, cfg, cache=cache, last_token_only=True,
+            rng=key if needs_rng else None,
         )
-        ref_cache = unstack_cache(ref_cache)
-        accumulate(logits[:, -1], ref_logit[:, -1])
+        cache = unstack_cache(cache)
+        t_prefill = time.time() - t0
 
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for i in range(args.tokens - 1):
-        tok, step_logits, cache = decode(
-            params, tok, cache, jax.random.fold_in(key, i)
-        )
-        tok = tok[:, None]
         if ref_check:
-            ref_logit, ref_cache = ref_decode(ref_params, out[-1], ref_cache)
-            accumulate(step_logits, ref_logit)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+            ref_cache = init_lm_cache(cfg, b, s_max, cfg.dtype)
+            ref_logit, ref_cache = lm.lm_forward(
+                ref_params, batch, dig, cfg, cache=ref_cache,
+                last_token_only=True,
+            )
+            ref_cache = unstack_cache(ref_cache)
+            accumulate(logits[:, -1], ref_logit[:, -1])
 
-    seqs = jnp.concatenate(out, axis=1)
-    mode = acfg.mode
-    print(f"arch={cfg.name} analog={analog} mode={mode} b_adc={acfg.b_adc} "
-          f"prefill={t_prefill*1e3:.1f}ms "
-          f"decode={t_decode/max(args.tokens-1,1)*1e3:.2f}ms/token")
-    if ref_check:
-        agree = float(agree_sum) / max(n_decisions, 1)
-        mse = float(err_sum) / max(n_elems, 1)
-        print(f"accuracy_vs_digital_ref: top1_agreement={agree:.4f} "
-              f"logit_mse={mse:.6e} decisions={n_decisions}")
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [tok]
+        t0 = time.time()
+        for i in range(args.tokens - 1):
+            tok, step_logits, cache = decode(
+                params, tok, cache, jax.random.fold_in(key, i)
+            )
+            tok = tok[:, None]
+            if ref_check:
+                ref_logit, ref_cache = ref_decode(ref_params, out[-1], ref_cache)
+                accumulate(step_logits, ref_logit)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        m = {
+            "t_prefill": t_prefill,
+            "t_decode": time.time() - t0,
+            "seqs": jnp.concatenate(out, axis=1),
+        }
+        if ref_check:
+            m["top1"] = float(agree_sum) / max(n_decisions, 1)
+            m["mse"] = float(err_sum) / max(n_elems, 1)
+            m["decisions"] = n_decisions
+        return m
+
+    def fmt_timing(m):
+        return (f"prefill={m['t_prefill']*1e3:.1f}ms "
+                f"decode={m['t_decode']/max(args.tokens-1,1)*1e3:.2f}"
+                "ms/token")
+
+    def fmt_counters(m):
+        return (f"top1_agreement={m['top1']:.4f} "
+                f"logit_mse={m['mse']:.6e} decisions={m['decisions']}")
+
+    def print_pass(m):
+        print(f"arch={cfg.name} analog={analog} mode={acfg.mode} "
+              f"b_adc={acfg.b_adc} {fmt_timing(m)}")
+        if ref_check:
+            print(f"accuracy_vs_digital_ref: {fmt_counters(m)}")
+
+    if schedule is None:
+        m = serve_pass(params)
+        print_pass(m)
+    else:
+        # Drift-lifecycle serving: ONE chip ages in place across the
+        # schedule; the program-event counter proves no reprogramming
+        # happens unless the refresh policy fires.
+        print(f"drift_schedule: ages={','.join(schedule.labels)}"
+              + (f" refresh_below={args.refresh_below}"
+                 if args.refresh_below is not None else ""))
+        events0 = engine.program_event_count()
+        reprograms = 0
+        refresh_wall = None  # schedule (wall) age of the last refresh
+        m = None
+        for i, t_age in enumerate(schedule):
+            if i > 0:
+                # schedule ages are wall-clock deployment times; a chip
+                # rewritten at wall age t_r is YOUNGER than the deployment:
+                # its device age at wall age t is t - t_r (floored at t_c),
+                # so a refresh genuinely resets the drift clock instead of
+                # being erased by the next absolute-age evaluation
+                dev_age = (t_age if refresh_wall is None
+                           else max(t_age - refresh_wall, pcm_lib.T_C))
+                if dev_age != program.t_seconds:
+                    program = engine.age_program(program, dev_age)
+                    params = program.params
+            line = (f"drift_age t={t_age:.0f}s "
+                    f"({pcm_lib.format_age(t_age)})")
+            if refresh_wall is not None:
+                line += f" chip_age={pcm_lib.format_age(program.t_seconds)}"
+            m = serve_pass(params)
+            line += f": {fmt_timing(m)}"
+            if ref_check:
+                line += " " + fmt_counters(m)
+            print(line)
+            if (args.refresh_below is not None
+                    and m["top1"] < args.refresh_below):
+                reprograms += 1
+                refresh_wall = t_age
+                print(f"drift_event t={t_age:.0f}s reprogram: "
+                      f"top1_agreement={m['top1']:.4f} < "
+                      f"refresh_below={args.refresh_below}; rewriting chip "
+                      f"from stored weights (chip age resets to "
+                      f"{pcm_lib.format_age(pcm_lib.T_C)})")
+                program = steps.refresh_program(
+                    program, src_params,
+                    jax.random.fold_in(jax.random.PRNGKey(43), reprograms),
+                    mesh=mesh, model_cfg=cfg,
+                )
+                params = program.params
+        delta = engine.program_event_count() - events0
+        print(f"drift_lifecycle: ages={len(schedule)} "
+              f"reprograms={reprograms} program_events_delta={delta} "
+              f"final_age={pcm_lib.format_age(program.t_seconds)}")
+        if args.save_program:
+            path = store.save_program(args.save_program, program)
+            hist = ",".join(pcm_lib.format_age(t)
+                            for t in program.age_history)
+            print(f"saved programmed chip artifact at final age "
+                  f"(age_history={hist}) to {path}")
+        print_pass(m)
     print("generated token ids (first sequence):",
-          seqs[0, : min(16, seqs.shape[1])].tolist())
+          m["seqs"][0, : min(16, m["seqs"].shape[1])].tolist())
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ def program_for_serving(
     transforms: Optional[dict] = None,
     with_mapping: bool = False,
     b_adc_overrides: Optional[dict] = None,
+    t_seconds: Optional[float] = None,
 ):
     """Program phase of an analog serving deployment -> CiMProgram.
 
@@ -51,6 +52,9 @@ def program_for_serving(
     ``b_adc_overrides``: per-layer {path-pattern: bits in {4, 6, 8}} for
     mixed-precision programs (e.g. keep the lm_head at 8 bits while the
     block projections serve at 4) -- see ``engine.compile_program``.
+
+    ``t_seconds`` overrides the config's chip age for the first evaluation
+    (drift-lifecycle serving compiles at the schedule's first age).
     """
     from repro.core import engine
     from repro.launch import sharding as shd
@@ -63,10 +67,44 @@ def program_for_serving(
         params,
         analog_cfg,
         key,
+        t_seconds=t_seconds,
         transforms=transforms,
         with_mapping=with_mapping,
         shardings=shardings,
         b_adc_overrides=b_adc_overrides,
+    )
+
+
+def refresh_program(
+    program: Any,
+    src_params: Any,
+    key: Array,
+    *,
+    mesh: Any = None,
+    model_cfg: Optional[ModelConfig] = None,
+    transforms: Optional[dict] = None,
+):
+    """Refresh policy: rewrite a drifted chip from the stored source weights.
+
+    When serving accuracy degrades past the deployment's threshold (GDC only
+    compensates the *mean* conductance decay, not the spread), the chip is
+    reprogrammed in place: fresh write noise is drawn, the drift clock resets
+    to the programming reference age t_c, and the refreshed chip serves the
+    same configuration -- per-layer bitwidth overrides are recovered from the
+    old program's quant plans, so refresh works for loaded artifacts too.
+    """
+    from repro.core import engine
+    from repro.core import pcm as pcm_lib
+
+    return program_for_serving(
+        src_params,
+        program.cfg,
+        key,
+        mesh=mesh,
+        model_cfg=model_cfg,
+        transforms=transforms,
+        b_adc_overrides=engine.plan_bit_overrides(program) or None,
+        t_seconds=pcm_lib.T_C,
     )
 
 

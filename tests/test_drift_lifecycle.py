@@ -1,0 +1,414 @@
+"""Drift-lifecycle subsystem: aging a programmed chip in place.
+
+Pins down the contracts the serving path banks on:
+
+  * **transitivity** -- compile_program(t=t1) then drift_to(t2) is
+    bit-identical to compile_program(t=t2) directly: a chip's state at an
+    age is a pure function of (program, age), never of the path taken;
+  * **statelessness** -- drift_to twice at the same age yields identical
+    trees (and composes: drift via an intermediate age lands on the same
+    bits), sharded and unsharded, with and without per-MVM read-noise
+    buffers;
+  * **age_program bookkeeping** -- aging appends to age_history, keeps
+    per-layer b_adc_bufs/read_bufs coherent, and adds zero programming
+    events;
+  * **artifact trajectory** -- a saved program remembers its age_history
+    (optional meta, v1-compatible: legacy artifacts load with their single
+    stored age) and reloads bit-exactly at the last age;
+  * **refresh policy plumbing** -- plan_bit_overrides recovers the
+    mixed-precision configuration from a program's quant plans and
+    steps.refresh_program rewrites a fresh chip at t_c that serves it.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.core import engine
+from repro.core import pcm as pcm_lib
+from repro.core.analog import AnalogConfig, linear_init, refresh_clip_ranges
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps
+
+T1, T2, T3 = 25.0, 3600.0, 86400.0
+
+
+def _infer(resample: bool = False) -> AnalogConfig:
+    return AnalogConfig().infer(
+        b_adc=8, t_seconds=T1, resample_read_noise=resample
+    )
+
+
+def _tree(seed: int = 0) -> dict:
+    """A small mixed tree: plain linear, stacked (scanned) linear."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    lin = refresh_clip_ranges(linear_init(k1, 96, 48))
+    stacked = {
+        "w": jax.random.normal(k2, (3, 64, 32), jnp.float32) * 0.05,
+        "w_clip_buf": jnp.tile(jnp.array([-1.0, 1.0], jnp.float32), (3, 1)),
+        "r_adc": jnp.ones((3,), jnp.float32),
+    }
+    return {"lin": lin, "blocks": stacked}
+
+
+def _trees_bit_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+# ------------------------------------------------------------ transitivity
+
+
+@pytest.mark.parametrize("resample", [False, True])
+def test_drift_transitivity_bit_exact(resample):
+    """compile(t1) -> drift_to(t2) == compile(t2): same chip, same bits --
+    effective weights, GDC scalars, and (with resample_read_noise) the
+    pre-read conductance/sigma buffers all included."""
+    params = _tree()
+    key = jax.random.PRNGKey(7)
+    via_drift = engine.compile_program(
+        params, _infer(resample), key
+    ).drift_to(T3)
+    direct = engine.compile_program(
+        params, dataclasses.replace(_infer(resample), t_seconds=T3), key
+    )
+    assert _trees_bit_equal(via_drift.params, direct.params)
+    assert _trees_bit_equal(via_drift.state, direct.state)
+    assert via_drift.t_seconds == direct.t_seconds == T3
+
+
+@pytest.mark.parametrize("resample", [False, True])
+def test_drift_to_stateless_and_composable(resample):
+    prog = engine.compile_program(_tree(), _infer(resample), jax.random.PRNGKey(7))
+    once = prog.drift_to(T2)
+    twice = prog.drift_to(T2)
+    assert _trees_bit_equal(once.params, twice.params)
+    # composing through an intermediate age lands on the same bits
+    via = prog.drift_to(T2).drift_to(T3)
+    direct = prog.drift_to(T3)
+    assert _trees_bit_equal(via.params, direct.params)
+    # and going back reproduces the original program exactly
+    back = direct.drift_to(T1)
+    assert _trees_bit_equal(back.params, prog.params)
+
+
+@pytest.mark.parametrize("resample", [False, True])
+def test_drift_transitivity_bit_exact_sharded(resample):
+    """The same transitivity contract for a mesh-programmed chip: drift_to
+    stays a sharding-preserving update and the aged sharded chip is
+    bit-identical to a host chip compiled directly at the target age.
+    Runs on however many devices are available (8 on the multidevice CI
+    job, 1 under plain tier-1)."""
+    from repro.models import ModelConfig, lm_init
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2).smoke()
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    mesh = mesh_lib.make_serving_mesh()
+    acfg = _infer(resample)
+    sharded = steps.program_for_serving(
+        params, acfg, jax.random.PRNGKey(1), mesh=mesh, model_cfg=cfg
+    ).drift_to(T3)
+    host = engine.compile_program(
+        params, dataclasses.replace(acfg, t_seconds=T3), jax.random.PRNGKey(1)
+    )
+    assert _trees_bit_equal(sharded.params, host.params)
+    assert _trees_bit_equal(sharded.state, host.state)
+
+
+# --------------------------------------------------- age_program semantics
+
+
+def test_age_program_records_history_and_never_reprograms():
+    prog = engine.compile_program(_tree(), _infer(), jax.random.PRNGKey(3))
+    assert prog.age_history == (T1,)
+    before = engine.program_event_count()
+    aged = engine.age_program(engine.age_program(prog, T2), T3)
+    assert engine.program_event_count() == before
+    assert aged.age_history == (T1, T2, T3)
+    assert aged.t_seconds == T3
+    # the underlying device state is untouched; drift_to stays stateless
+    # (it records nothing)
+    assert _trees_bit_equal(aged.state, prog.state)
+    assert prog.drift_to(T2).age_history == (T1,)
+
+
+def test_age_program_keeps_bitwidth_and_read_buffers_coherent():
+    """Aging must carry the per-layer shape-encoded bitwidths along and
+    rebuild the read buffers at the new age (same chip, same keys)."""
+    params = _tree()
+    prog = engine.compile_program(
+        params, _infer(resample=True), jax.random.PRNGKey(3),
+        b_adc_overrides={"lin": 4},
+    )
+    aged = engine.age_program(prog, T3)
+    assert engine.bits_of(aged.params["lin"]["b_adc_buf"]) == 4
+    assert "b_adc_buf" not in aged.params["blocks"]
+    assert aged.plans == prog.plans  # plans are static geometry + bits
+    direct = engine.compile_program(
+        params,
+        dataclasses.replace(_infer(resample=True), t_seconds=T3),
+        jax.random.PRNGKey(3),
+        b_adc_overrides={"lin": 4},
+    )
+    assert _trees_bit_equal(
+        aged.params["lin"]["read_buf"], direct.params["lin"]["read_buf"]
+    )
+
+
+def test_moe_bank_ages_in_place():
+    e, m, h = 2, 32, 48
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    bank = {
+        "w1": jax.random.normal(keys[0], (e, m, h)) * 0.1,
+        "w3": jax.random.normal(keys[1], (e, m, h)) * 0.1,
+        "w2": jax.random.normal(keys[2], (e, h, m)) * 0.1,
+        "r_adc": jnp.ones((3,)),
+        "w_clip_buf": jnp.tile(jnp.array([-1.0, 1.0]), (3, 1)),
+    }
+    prog = engine.compile_program({"moe": bank}, _infer(), jax.random.PRNGKey(1))
+    aged = engine.age_program(prog, T3)
+    direct = engine.compile_program(
+        {"moe": bank}, dataclasses.replace(_infer(), t_seconds=T3),
+        jax.random.PRNGKey(1),
+    )
+    assert _trees_bit_equal(aged.params, direct.params)
+
+
+# ------------------------------------------------------------ DriftSchedule
+
+
+def test_drift_schedule_parse_and_validate():
+    s = engine.DriftSchedule.parse("25,3600,86400")
+    assert s.times == (25.0, 3600.0, 86400.0)
+    assert s.labels == ("25s", "1h", "1d")
+    assert engine.DriftSchedule.parse("fig7").times == tuple(
+        pcm_lib.FIG7_TIMES.values()
+    )
+    assert len(engine.DriftSchedule.log_spaced(25.0, 86400.0, 4)) == 4
+    with pytest.raises(ValueError, match="increasing"):
+        engine.DriftSchedule((3600.0, 25.0))
+    with pytest.raises(ValueError, match="at least one"):
+        engine.DriftSchedule(())
+    with pytest.raises(ValueError, match="drift schedule"):
+        engine.DriftSchedule.parse("a,b")
+    # ages below the programming reference age are rejected, not clamped:
+    # t <= 0 would NaN the read-noise scale and (0, t_c) would serve the
+    # same chip under different labels
+    with pytest.raises(ValueError, match="t_c"):
+        engine.DriftSchedule.parse("1,5,10")
+    with pytest.raises(ValueError, match="t_c"):
+        engine.DriftSchedule((-10.0, 5.0))
+    # NaN compares False under both the ordering and t_c checks -- it must
+    # be rejected explicitly, not poison the PCM chain downstream
+    with pytest.raises(ValueError, match="finite"):
+        engine.DriftSchedule.parse("nan,3600")
+    with pytest.raises(ValueError, match="finite"):
+        engine.DriftSchedule((25.0, float("inf")))
+
+
+def test_log_spaced_times_floor_at_t_c():
+    ts = pcm_lib.log_spaced_times(1.0, 86400.0, 3)
+    assert ts[0] == pcm_lib.T_C and ts[-1] == 86400.0  # exact endpoints
+    assert all(b > a for a, b in zip(ts, ts[1:]))
+    # degenerate ranges collapse instead of producing non-monotone grids
+    assert pcm_lib.log_spaced_times(25.0, 25.0, 3) == (pcm_lib.T_C,)
+    assert engine.DriftSchedule.log_spaced(1.0, 10.0, 3).times == (
+        pcm_lib.T_C,
+    )
+
+
+# ------------------------------------------------- artifact age trajectory
+
+
+def test_artifact_roundtrip_preserves_age_history(tmp_path):
+    prog = engine.compile_program(_tree(), _infer(), jax.random.PRNGKey(5))
+    aged = engine.age_program(engine.age_program(prog, T2), T3)
+    pdir = str(tmp_path / "chip")
+    store.save_program(pdir, aged)
+    loaded = store.load_program(pdir)
+    assert loaded.age_history == (T1, T2, T3)
+    assert loaded.t_seconds == T3
+    # reloads serve bit-exactly at the last age
+    assert _trees_bit_equal(loaded.params, aged.params)
+    # and keeps aging like the in-memory chip would
+    assert _trees_bit_equal(
+        engine.age_program(loaded, 2 * T3).params,
+        engine.age_program(aged, 2 * T3).params,
+    )
+
+
+def test_legacy_artifact_without_age_history_loads(tmp_path):
+    """Pre-age_history v1 artifacts stay loadable: the history defaults to
+    the single stored evaluation age."""
+    prog = engine.compile_program(_tree(), _infer(), jax.random.PRNGKey(5))
+    aged = engine.age_program(prog, T3)
+    pdir = str(tmp_path / "chip")
+    store.save_program(pdir, aged)
+    meta_path = os.path.join(pdir, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["age_history"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    loaded = store.load_program(pdir)
+    assert loaded.age_history == (T3,)
+    assert _trees_bit_equal(loaded.params, aged.params)
+
+
+# ------------------------------------------------------------- serve smoke
+
+
+def test_serve_drift_schedule_smoke(monkeypatch, capsys):
+    """The acceptance contract end-to-end: one programmed chip served at
+    every schedule age, per-age counters emitted, ZERO programming events
+    during the whole lifecycle run."""
+    from repro.launch import serve
+
+    monkeypatch.setattr(
+        "sys.argv",
+        ["serve", "--analog", "--batch", "1", "--prompt-len", "4",
+         "--tokens", "3", "--drift-schedule", "25,86400"],
+    )
+    serve.main()
+    out = capsys.readouterr().out
+    assert out.count("drift_age ") == 2, out
+    assert ("drift_lifecycle: ages=2 reprograms=0 "
+            "program_events_delta=0") in out
+    assert out.count("top1_agreement=") == 3  # 2 per-age lines + summary
+
+
+def test_serve_refresh_resets_the_drift_clock(monkeypatch, capsys):
+    """After --refresh-below fires at wall age t_r, later schedule ages
+    must evaluate the fresh chip at its own device age (t - t_r), not the
+    absolute deployment age -- otherwise the refresh is erased by the next
+    evaluation and the policy never helps."""
+    from repro.launch import serve
+
+    monkeypatch.setattr(
+        "sys.argv",
+        ["serve", "--analog", "--batch", "1", "--prompt-len", "4",
+         "--tokens", "3", "--drift-schedule", "25,86400",
+         "--refresh-below", "1.0"],  # random-init smoke: always fires
+    )
+    serve.main()
+    out = capsys.readouterr().out
+    assert "drift_event t=25s reprogram" in out
+    # wall age 1d, but the chip was rewritten at wall age 25s: the line
+    # reports the fresh chip's own device age (86400 - 25 s, labeled ~1d)
+    # instead of silently re-aging it to the absolute deployment age
+    age_line = [l for l in out.splitlines()
+                if l.startswith("drift_age t=86400s")][0]
+    assert "chip_age=" in age_line, age_line
+    lifecycle = [l for l in out.splitlines()
+                 if l.startswith("drift_lifecycle:")][0]
+    assert "ages=2" in lifecycle
+    assert "reprograms=0" not in lifecycle
+
+
+def test_serve_reload_records_age_in_saved_history(monkeypatch, capsys,
+                                                   tmp_path):
+    """--load-program --t-hours X --save-program must append X to the
+    artifact's age_history (the non-schedule load path ages through
+    age_program, not bare drift_to), so the re-saved chip's trajectory is
+    never stale."""
+    from repro.launch import serve
+
+    first = str(tmp_path / "chip")
+    second = str(tmp_path / "chip2")
+    base = ["serve", "--batch", "1", "--prompt-len", "4", "--tokens", "3",
+            "--no-ref-check"]
+    monkeypatch.setattr(
+        "sys.argv", base + ["--analog", "--t-hours", "24",
+                            "--save-program", first],
+    )
+    serve.main()
+    monkeypatch.setattr(
+        "sys.argv", base + ["--load-program", first, "--t-hours", "48",
+                            "--save-program", second],
+    )
+    serve.main()
+    capsys.readouterr()
+    with open(os.path.join(second, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["age_history"] == [24 * 3600.0, 48 * 3600.0]
+    assert meta["t_seconds"] == 48 * 3600.0
+
+
+@pytest.mark.parametrize(
+    "argv",
+    [
+        ["serve", "--drift-schedule", "25,3600"],  # no compiled program
+        ["serve", "--analog", "--per-call", "--drift-schedule", "25,3600"],
+        ["serve", "--analog", "--refresh-below", "0.9"],  # no schedule
+        ["serve", "--analog", "--drift-schedule", "25,3600",
+         "--refresh-below", "0.9", "--no-ref-check"],  # needs counters
+        ["serve", "--analog", "--drift-schedule", "3600,25"],  # not monotone
+        ["serve", "--analog", "--drift-schedule", "1,5,10"],  # below t_c
+    ],
+)
+def test_serve_drift_cli_validation(monkeypatch, argv):
+    from repro.launch import serve
+
+    monkeypatch.setattr("sys.argv", argv)
+    with pytest.raises(SystemExit):
+        serve.main()
+
+
+# ------------------------------------------------------------- refresh path
+
+
+def test_plan_bit_overrides_recovers_mixed_precision():
+    params = {"body": _tree()["lin"], "head": _tree(1)["lin"]}
+    prog = engine.compile_program(
+        params, _infer(), jax.random.PRNGKey(2), b_adc_overrides={"head": 4}
+    )
+    assert engine.plan_bit_overrides(prog) == {"head": 4}
+
+    e, m, h = 2, 32, 48
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    bank = {
+        "w1": jax.random.normal(keys[0], (e, m, h)) * 0.1,
+        "w3": jax.random.normal(keys[1], (e, m, h)) * 0.1,
+        "w2": jax.random.normal(keys[2], (e, h, m)) * 0.1,
+        "r_adc": jnp.ones((3,)),
+        "w_clip_buf": jnp.tile(jnp.array([-1.0, 1.0]), (3, 1)),
+    }
+    prog = engine.compile_program(
+        {"moe": bank}, _infer(), jax.random.PRNGKey(1),
+        b_adc_overrides={"moe": 6},
+    )
+    rec = engine.plan_bit_overrides(prog)
+    assert rec["moe"] == 6  # bank-level pattern recovered from family plans
+
+
+def test_refresh_program_rewrites_fresh_chip_at_t_c():
+    """The serve-time refresh policy: a new chip (fresh write noise, age
+    t_c, fresh age_history) serving the same mixed-precision plans."""
+    params = {"body": _tree()["lin"], "head": _tree(1)["lin"]}
+    prog = engine.age_program(
+        engine.compile_program(
+            params, _infer(), jax.random.PRNGKey(2),
+            b_adc_overrides={"head": 4},
+        ),
+        T3,
+    )
+    before = engine.program_event_count()
+    fresh = steps.refresh_program(prog, params, jax.random.PRNGKey(99))
+    assert engine.program_event_count() > before  # this IS a reprogram
+    assert fresh.t_seconds == pcm_lib.T_C
+    assert fresh.age_history == (pcm_lib.T_C,)
+    assert fresh.plans == prog.plans  # same geometry, same bitwidths
+    assert engine.bits_of(fresh.params["head"]["b_adc_buf"]) == 4
+    # different write-noise draw: a genuinely new chip
+    assert not np.array_equal(
+        np.asarray(fresh.state["body"]["g_pos"]),
+        np.asarray(prog.state["body"]["g_pos"]),
+    )

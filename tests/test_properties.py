@@ -1,0 +1,198 @@
+"""Property-test net under the PCM/quant laws the serving artifact rests on.
+
+Four invariants, checked over hypothesis-driven inputs (or the seeded
+fallback grid on minimal images):
+
+  * ADC output codes stay inside the signed b-bit range for every
+    serving-supported bitwidth -- the fused kernel epilogue and the jnp
+    oracle both bank on it;
+  * the drift law (t/t_c)^-nu is monotonically non-increasing in t and has
+    its fixed point drift_factor == 1 at t = t_c, so aging a chip can only
+    move conductances down and re-evaluating at the programming age is the
+    identity;
+  * the GDC out_scale is a function of the conductance *multiset*:
+    det_sum's fixed-point limb reduction makes it bit-invariant under any
+    row/col permutation (hence any sharding/reduction order);
+  * DAC/ADC fake-quantization is idempotent -- re-quantizing a quantized
+    activation is a bit-exact no-op, so chained quantizers cannot compound.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # minimal CI images: run a fixed example grid instead
+    from _hypothesis_fallback import given, hypothesis, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.core import pcm, quant
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+# --------------------------------------------------------- ADC code range
+
+
+@given(
+    bits=st.sampled_from([4, 6, 8]),
+    r=st.floats(0.05, 50.0),
+    scale=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adc_codes_in_signed_range(bits, r, scale, seed):
+    """ADC codes lie in [-2^(b-1), 2^(b-1)-1] for every serving bitwidth.
+
+    The symmetric quantizer actually uses [-(2^(b-1)-1), 2^(b-1)-1]; the
+    signed-range bound is what the b-bit datapath requires.
+    """
+    y = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * r * scale
+    spec = quant.QuantSpec(b_adc=bits)
+    yq = np.asarray(quant.adc_quantize(y, jnp.float32(r), spec))
+    step = (abs(r) + 1e-9) / (2 ** (bits - 1) - 1)
+    codes = yq / step
+    assert np.allclose(codes, np.round(codes), atol=1e-3), "off-grid output"
+    codes = np.round(codes)
+    assert codes.min() >= -(2 ** (bits - 1))
+    assert codes.max() <= 2 ** (bits - 1) - 1
+
+
+@given(
+    bits=st.sampled_from([4, 6, 8]),
+    r_adc=st.floats(0.05, 20.0),
+    gain_s=st.floats(0.1, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dac_codes_in_signed_range(bits, r_adc, gain_s, seed):
+    """DAC codes respect the (b_adc + 1)-bit signed range (Eq. 3)."""
+    w_max = 1.0
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 4.0
+    spec = quant.QuantSpec(b_adc=bits)
+    xq = np.asarray(
+        quant.dac_quantize(x, jnp.float32(r_adc), jnp.float32(gain_s),
+                           jnp.float32(w_max), spec)
+    )
+    b_dac = bits + 1
+    r_dac = abs(r_adc) * abs(gain_s) / (abs(w_max) + 1e-9)
+    step = (r_dac + 1e-9) / (2 ** (b_dac - 1) - 1)
+    codes = np.round(xq / step)
+    assert codes.min() >= -(2 ** (b_dac - 1))
+    assert codes.max() <= 2 ** (b_dac - 1) - 1
+
+
+# ------------------------------------------------------------- drift law
+
+
+@given(
+    nu=st.floats(0.0, 0.2),
+    t1=st.floats(0.0, 4.0e7),
+    dt=st.floats(0.0, 4.0e7),
+)
+def test_drift_factor_monotone_non_increasing(nu, t1, dt):
+    nu_ = jnp.float32(nu)
+    f1 = float(pcm.drift_factor(nu_, jnp.float32(t1)))
+    f2 = float(pcm.drift_factor(nu_, jnp.float32(t1 + dt)))
+    assert f2 <= f1, (t1, dt, f1, f2)
+    assert f1 <= 1.0 + 1e-6  # never amplifies
+
+
+@given(nu=st.floats(0.0, 0.2), seed=st.integers(0, 2**31 - 1))
+def test_drift_factor_is_one_at_t_c(nu, seed):
+    """At the programming reference age t_c the drift law is the identity --
+    for scalar nu and for a whole per-device nu field."""
+    assert float(pcm.drift_factor(jnp.float32(nu), jnp.float32(pcm.T_C))) == 1.0
+    nus = pcm.sample_drift_nu(jax.random.PRNGKey(seed), (64,))
+    np.testing.assert_array_equal(
+        np.asarray(pcm.drift_factor(nus, jnp.float32(pcm.T_C))),
+        np.ones(64, np.float32),
+    )
+    # below t_c the law is clamped flat at 1 (defined for t >= t_c)
+    assert float(pcm.drift_factor(jnp.float32(nu), jnp.float32(1.0))) == 1.0
+
+
+def test_drift_factor_monotone_over_fig7_grid():
+    """Elementwise over a per-device nu field, the factor only decays along
+    the paper's 25s -> 1y evaluation grid."""
+    nus = pcm.sample_drift_nu(jax.random.PRNGKey(0), (128,))
+    prev = np.asarray(pcm.drift_factor(nus, jnp.float32(pcm.T_C)))
+    for t in pcm.FIG7_TIMES.values():
+        cur = np.asarray(pcm.drift_factor(nus, jnp.float32(t)))
+        assert np.all(cur <= prev + 1e-7), t
+        prev = cur
+
+
+# ------------------------------------------- GDC permutation invariance
+
+
+@given(
+    rows=st.integers(1, 32),
+    cols=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+    t=st.floats(25.0, 3.2e7),
+)
+def test_gdc_out_scale_permutation_invariant(rows, cols, seed, t):
+    """The GDC scalar must not care how the conductance pairs are laid out:
+    det_sum's fixed-point limb reduction is bit-identical under any row/col
+    permutation (the basis of the sharded == host chip guarantee)."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    g_t = jax.random.uniform(k1, (rows, cols), jnp.float32, 0.0, 2.4)
+    nu = pcm.sample_drift_nu(k2, (rows, cols))
+    g_d = g_t * pcm.drift_factor(nu, jnp.float32(t))
+    pr = jax.random.permutation(k3, rows)
+    pc = jax.random.permutation(k4, cols)
+    scale = float(pcm.det_sum(g_t)) / (float(pcm.det_sum(g_d)) + 1e-12)
+    scale_p = float(pcm.det_sum(g_t[pr][:, pc])) / (
+        float(pcm.det_sum(g_d[pr][:, pc])) + 1e-12
+    )
+    assert scale == scale_p  # bitwise, not approximately
+
+
+@given(n=st.integers(1, 512), seed=st.integers(0, 2**31 - 1))
+def test_det_sum_order_independent_vs_flat(n, seed):
+    """det_sum of any reshape/permutation of the same multiset is the same
+    float, bit for bit."""
+    g = jax.random.uniform(jax.random.PRNGKey(seed), (n,), jnp.float32, 0.0, 2.4)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), n)
+    a = float(pcm.det_sum(g))
+    b = float(pcm.det_sum(g[perm]))
+    c = float(pcm.det_sum(g[::-1]))
+    assert a == b == c
+
+
+# ------------------------------------------------- quantizer idempotence
+
+
+@given(
+    bits=st.sampled_from([4, 6, 8]),
+    r=st.floats(0.05, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adc_quantization_idempotent(bits, r, seed):
+    """Quantizing a quantized pre-activation is a bit-exact no-op."""
+    y = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * r * 2.0
+    spec = quant.QuantSpec(b_adc=bits)
+    y1 = quant.adc_quantize(y, jnp.float32(r), spec)
+    y2 = quant.adc_quantize(y1, jnp.float32(r), spec)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+@given(
+    bits=st.sampled_from([4, 6, 8]),
+    r_adc=st.floats(0.05, 20.0),
+    gain_s=st.floats(0.1, 5.0),
+    w_max=st.floats(0.1, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dac_quantization_idempotent(bits, r_adc, gain_s, w_max, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 4.0
+    spec = quant.QuantSpec(b_adc=bits)
+    args = (jnp.float32(r_adc), jnp.float32(gain_s), jnp.float32(w_max), spec)
+    x1 = quant.dac_quantize(x, *args)
+    x2 = quant.dac_quantize(x1, *args)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))

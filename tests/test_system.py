@@ -49,9 +49,13 @@ def test_accuracy_degrades_monotonically_in_bitwidth(kws_model):
     assert accs[8] >= accs[4] - 0.05, accs
 
 
+@pytest.mark.slow
 def test_lm_two_stage_training_learns():
     """The framework-level claim: the paper's methodology runs unchanged on
-    the LM family and the model still learns under noise+quantization."""
+    the LM family and the model still learns under noise+quantization.
+
+    ~25-45 s and the ROADMAP's flake candidate: marked slow so the tier-1
+    PR gate skips it while the nightly -m slow run keeps the coverage."""
     cfg = ModelConfig(
         name="sys-lm", family="dense", n_layers=2, d_model=64, n_heads=4,
         n_kv_heads=2, head_dim=16, d_ff=128, vocab=128, remat=False,
