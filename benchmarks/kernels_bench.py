@@ -4,14 +4,72 @@ TPU v5e vs the unfused jnp composition's extra partial-sum traffic)."""
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_call
+from repro.core import engine as engine_lib
+from repro.core.analog import AnalogConfig
 from repro.kernels.ops import analog_mvm
 from repro.kernels.ref import analog_mvm_ref
 
 HBM_BW = 819e9
+
+
+def _execute_mvm_rows(fast: bool) -> list[str]:
+    """Fused GDC-epilogue kernel vs the jnp ``execute_mvm`` oracle.
+
+    Times the engine's unified execute hot path (the ``pcm_programmed``
+    serving MVM: pre-quantized inputs x effective weights, per-row-tile ADC,
+    fused GDC ``out_scale``) through both backends of the SAME
+    ExecutionPlan machinery: the Pallas kernel and the tile-serial jnp
+    reference. Off-TPU the kernel runs in interpret mode (functional
+    parity, no perf claim); on a TPU host (``jax.devices()[0].platform ==
+    "tpu"``) it is the real lowering and the row pair is the
+    kernel-vs-oracle speedup the ROADMAP asks for. The derived column
+    carries the backend and the max |kernel - oracle| deviation on the
+    probe batch (ADC codes are asserted identical in tests/test_lowbit.py;
+    FMA fusion may move the digital sum 1-2 ulp).
+    """
+    on_tpu = jax.devices()[0].platform == "tpu"
+    shapes = [(128, 2048, 256)] if fast else [(128, 2048, 256),
+                                              (256, 4096, 512)]
+    acfg = AnalogConfig().infer(b_adc=8)
+    rows = []
+    for m, k, n in shapes:
+        key = jax.random.PRNGKey(0)
+        x_q = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(key, (k, n), jnp.float32) * k**-0.5
+        ra, gdc = jnp.float32(2.0), jnp.float32(1.3)
+        plan_o = engine_lib.plan_for(acfg, k, n)
+        plan_k = engine_lib.plan_for(
+            dataclasses.replace(
+                acfg, use_kernel=True, interpret=not on_tpu
+            ),
+            k, n,
+        )
+
+        def oracle(x, w, _p=plan_o):
+            return engine_lib.execute_mvm(x, w, ra, _p, out_scale=gdc)
+
+        def kernel(x, w, _p=plan_k):
+            return engine_lib.execute_mvm(x, w, ra, _p, out_scale=gdc)
+
+        iters = 2 if fast else 5
+        us_o = time_call(jax.jit(oracle), x_q, w, iters=iters)
+        us_k = time_call(jax.jit(kernel), x_q, w, iters=iters)
+        dev = float(jnp.max(jnp.abs(kernel(x_q, w) - oracle(x_q, w))))
+        backend = "tpu" if on_tpu else "interpret"
+        rows.append(csv_row(
+            f"execute_mvm_oracle_gdc_{m}x{k}x{n}", us_o,
+            f"backend=jnp_tiles={plan_o.n_row_tiles}"))
+        rows.append(csv_row(
+            f"execute_mvm_kernel_gdc_{m}x{k}x{n}", us_k,
+            f"backend={backend}_speedup_vs_oracle={us_o / max(us_k, 1e-9):.2f}x"
+            f"_max_abs_dev={dev:.2e}"))
+    return rows
 
 
 def run(fast: bool = False) -> list[str]:
@@ -53,6 +111,7 @@ def run(fast: bool = False) -> list[str]:
         rows.append(csv_row(
             f"analog_mvm_gdc_epilogue_{m}x{k}x{n}", us_serve,
             f"tpu_roofline_us={fused_bytes/HBM_BW*1e6:.1f}_fused_gdc"))
+    rows.extend(_execute_mvm_rows(fast))
     return rows
 
 

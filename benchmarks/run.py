@@ -32,7 +32,8 @@ def _row_to_record(row: str) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma list of suite-name prefixes to run")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (for CI artifacts)")
     ap.add_argument("--require", default=None, metavar="NAMES",
@@ -48,6 +49,7 @@ def main() -> None:
         fig9_micronet,
         kernels_bench,
         pipeline_bench,
+        serving_bench,
         table1_ablation,
         table2_aoncim,
         table3_depthwise,
@@ -58,16 +60,22 @@ def main() -> None:
         ("table3_depthwise", table3_depthwise.run),
         ("fig8_layerwise", fig8_layerwise.run),
         ("pipeline", pipeline_bench.run),
+        ("serving", serving_bench.run),
         ("kernels", kernels_bench.run),
         ("table1_ablation", table1_ablation.run),
         ("fig7_drift", fig7_drift.run),
         ("fig9_micronet", fig9_micronet.run),
         ("appxC_heuristic", appxC_heuristic.run),
     ]
+    only = (
+        [p.strip() for p in args.only.split(",") if p.strip()]
+        if args.only
+        else None
+    )
     records: list[dict] = []
     print("name,us_per_call,derived")
     for name, fn in suites:
-        if args.only and not name.startswith(args.only):
+        if only and not any(name.startswith(p) for p in only):
             continue
         t0 = time.time()
         try:

@@ -1,88 +1,83 @@
-"""End-to-end serving driver: batched requests through prefill + decode,
-digital vs analog-PCM weights (the deployment the AON-CiM accelerator
-targets, on the LM family the framework scales the technique to).
+"""End-to-end serving driver: variable-length requests through the
+continuous-batching engine, digital vs analog-PCM weights (the deployment
+the AON-CiM accelerator targets, on the LM family the framework scales the
+technique to).
 
     PYTHONPATH=src python examples/serve_batched.py --arch tinyllama-1.1b
+
+Builds a variable-length request trace, serves it twice through
+``repro.serving.ServingEngine`` -- once on digital weights, once on a
+compiled PCM chip (program-once / execute-many) -- and compares the token
+streams plus the continuous-vs-static batching throughput on the analog
+engine.
 """
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.core import engine
 from repro.core.analog import AnalogConfig
 from repro.models import lm
-from repro.models.lm import init_lm_cache, unstack_cache
-
-
-def serve(cfg, acfg, requests, max_new_tokens, rng):
-    """requests: (B, S) prompt tokens -> (B, max_new_tokens) generations."""
-    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
-    if acfg.mode == "pcm_infer":
-        # Program-once deployment: the PCM chain runs a single time here;
-        # prefill and every decode step execute the programmed conductances
-        # (mode becomes pcm_programmed -- no per-step RNG needed).
-        program = engine.compile_program(params, acfg, rng)
-        params, acfg = program.params, program.cfg
-    needs_rng = acfg.needs_rng  # per-call noise modes draw per step
-    b, s = requests.shape
-    cache = init_lm_cache(cfg, b, s + max_new_tokens, cfg.dtype)
-    logits, cache = lm.lm_forward(
-        params, {"tokens": requests}, acfg, cfg, cache=cache,
-        last_token_only=True,
-        rng=rng if needs_rng else None,
-    )
-    cache = unstack_cache(cache)
-
-    @jax.jit
-    def decode(tokens, cache, key):
-        logits, cache = lm.lm_forward(
-            params, {"tokens": tokens}, acfg, cfg, cache=cache,
-            rng=key if needs_rng else None,
-        )
-        return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), cache
-
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for i in range(max_new_tokens - 1):
-        tok, cache = decode(tok, cache, jax.random.fold_in(rng, i))
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = (time.time() - t0) / max(max_new_tokens - 1, 1)
-    return jnp.concatenate(out, 1), dt
+from repro.serving import ServingEngine, StaticBatchScheduler, poisson_trace
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b",
                     choices=sorted(configs.LM_ARCHS))
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
     key = jax.random.PRNGKey(1)
-    requests = jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab)
-
-    gen_d, dt_d = serve(cfg, AnalogConfig(), requests, args.new_tokens, key)
-    gen_a, dt_a = serve(
-        cfg, AnalogConfig().infer(b_adc=8, t_seconds=86400.0),
-        requests, args.new_tokens, key,
+    trace = poisson_trace(
+        key, args.requests, vocab=cfg.vocab,
+        prompt_lens=tuple(sorted({max(1, args.prompt_len // 2),
+                                  args.prompt_len})),
+        new_tokens=(max(1, args.new_tokens // 4), args.new_tokens),
     )
-    agree = float((gen_d == gen_a).mean())
-    print(f"arch={cfg.name}  batch={args.batch}")
-    print(f"digital decode: {dt_d*1e3:.1f} ms/token")
-    print(f"analog  decode: {dt_a*1e3:.1f} ms/token (PCM weights @24h, 8-bit)")
+    s_max = args.prompt_len + args.new_tokens
+
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    digital = ServingEngine(
+        cfg, AnalogConfig(), params, n_slots=args.slots, s_max=s_max,
+    )
+    rep_d = digital.run(trace)
+
+    # Program-once deployment: the PCM chain runs a single time here; every
+    # prefill/decode step executes the programmed conductances.
+    program = engine.compile_program(
+        params, AnalogConfig().infer(b_adc=8, t_seconds=86400.0), key
+    )
+    analog = ServingEngine.for_program(
+        program, cfg, n_slots=args.slots, s_max=s_max,
+    )
+    rep_a = analog.run(trace)
+    rep_s = analog.run(trace, scheduler=StaticBatchScheduler())
+
+    matches = [
+        float(np.mean(rep_d.tokens_of(r.rid) == rep_a.tokens_of(r.rid)))
+        for r in trace
+    ]
+    agree = float(np.mean(matches))
+    print(f"arch={cfg.name}  slots={args.slots}  requests={args.requests}")
+    print(f"digital  {rep_d.summary()}")
+    print(f"analog   {rep_a.summary()}")
+    print(f"static   {rep_s.summary()}")
+    print(f"continuous_vs_static_steps: {rep_s.n_steps}/{rep_a.n_steps} "
+          f"= {rep_s.n_steps / max(rep_a.n_steps, 1):.2f}x fewer decode "
+          "steps for the same tokens")
     print(f"token agreement digital vs analog: {agree*100:.1f}% "
           f"(untrained weights; HW-aware training closes this gap)")
-    print("digital sample:", gen_d[0, :10].tolist())
-    print("analog  sample:", gen_a[0, :10].tolist())
+    r0 = trace[0].rid
+    print("digital sample:", rep_d.tokens_of(r0)[:10].tolist())
+    print("analog  sample:", rep_a.tokens_of(r0)[:10].tolist())
 
 
 if __name__ == "__main__":

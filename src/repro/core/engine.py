@@ -790,6 +790,22 @@ def plan_bit_overrides(program: "CiMProgram") -> dict[str, int]:
     return out
 
 
+def device_age(t_wall: float, refresh_wall: Optional[float]) -> float:
+    """Device age of a chip at wall (deployment) age ``t_wall``.
+
+    ``refresh_wall`` is the wall age the chip was last rewritten at (None =
+    never refreshed). A rewritten chip is YOUNGER than the deployment: its
+    drift clock restarted at the refresh, so its device age is ``t_wall -
+    refresh_wall``, floored at the programming reference age t_c (below
+    which the drift law is undefined). Shared by every refresh-policy
+    consumer (serve.py's drift loop, serving.DriftPolicy) so the wall-vs-
+    device arithmetic cannot diverge between paths.
+    """
+    if refresh_wall is None:
+        return float(t_wall)
+    return max(float(t_wall) - float(refresh_wall), pcm_lib.T_C)
+
+
 def age_program(program: "CiMProgram", t_seconds: float) -> "CiMProgram":
     """Advance a programmed chip to age ``t_seconds`` -- never reprograms.
 

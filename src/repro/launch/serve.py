@@ -1,18 +1,24 @@
-"""Serving launcher: batched prefill + decode with optional PCM simulation.
+"""Serving launcher: request-level serving over the repro.serving engine.
 
 ``python -m repro.launch.serve --arch tinyllama-1.1b --tokens 32 --batch 4``
 
-Runs a (reduced-config) model through the production serving flow:
-prefill(prompt) -> unstack cache -> decode loop, optionally with the analog
-PCM deployment (--analog --t-hours 24) to show deployment-time
-accuracy/latency behaviour of the paper's technique on LMs.
+Runs a (reduced-config) model through the production serving flow. All
+serving goes through ``repro.serving.ServingEngine`` -- one jitted decode
+over a slot-based KV cache -- in one of two shapes:
+
+* default: a rectangle batch of ``--batch`` identical-length requests
+  (the classic fixed-batch pass, now expressed as requests);
+* ``--request-trace N``: N variable-length requests served by the
+  continuous-batching scheduler -- retired slots are refilled mid-flight
+  so the decode batch stays full. ``--arrival-rate R`` spaces the trace
+  over Poisson arrivals at R requests/second (default: all queued at t=0).
 
 With ``--analog`` the PCM weights are programmed exactly ONCE before the
 decode loop (engine.compile_program: the hardware's program-once /
 execute-many lifecycle); every prefill/decode step then executes against the
 programmed conductances with the GDC epilogue and needs no per-step RNG.
 ``--per-call`` restores the legacy behaviour that re-simulates programming
-inside every forward call -- useful only to measure what program-once saves.
+inside every forward -- useful only to measure what program-once saves.
 
 The programmed chip is a deployable artifact: ``--save-program DIR``
 persists it (versioned layout, checkpoint/store.py) and ``--load-program
@@ -45,18 +51,19 @@ threshold, the chip is reprogrammed from the stored source weights
 logged ``reprogram`` event) and the remaining schedule serves the fresh
 chip. ``--save-program`` after a schedule persists the final aged chip with
 its full ``age_history``, so a reloaded artifact serves bit-exactly at the
-last age.
+last age. Combined with ``--request-trace``, the schedule becomes a
+``serving.DriftPolicy``: the chip ages (and refreshes) BETWEEN decode
+steps of one continuous run -- the paper's always-on deployment.
 """
 
 from __future__ import annotations
 
 import argparse
-import math
 import sys
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.checkpoint import store
@@ -68,7 +75,12 @@ from repro.core.quant import SUPPORTED_B_ADC
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps
 from repro.models import lm
-from repro.models.lm import init_lm_cache, unstack_cache
+from repro.serving import (
+    DriftPolicy,
+    Request,
+    ServingEngine,
+    poisson_trace,
+)
 
 
 def parse_b_adc_overrides(text: str) -> dict:
@@ -88,13 +100,30 @@ def parse_b_adc_overrides(text: str) -> dict:
     return out
 
 
-def main() -> None:
+def trace_prompt_buckets(prompt_len: int) -> tuple[int, ...]:
+    """Variable prompt-length buckets for --request-trace.
+
+    A small bucket set bounds the number of prefill traces (one jit trace
+    per distinct prompt length) while keeping the workload variable.
+    """
+    return tuple(sorted({max(1, (prompt_len * k) // 4) for k in (1, 2, 3, 4)}))
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b",
                     choices=sorted(configs.LM_ARCHS))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--request-trace", type=int, default=None, metavar="N",
+                    help="continuous batching: serve N variable-length "
+                         "requests (prompts bucketed up to --prompt-len, "
+                         "budgets up to --tokens) through the request-level "
+                         "scheduler over --batch decode slots")
+    ap.add_argument("--arrival-rate", type=float, default=None, metavar="R",
+                    help="Poisson arrivals at R requests/s for "
+                         "--request-trace (default: all queued at t=0)")
     ap.add_argument("--analog", action="store_true",
                     help="serve through the PCM deployment (program-once)")
     ap.add_argument("--per-call", action="store_true",
@@ -136,7 +165,11 @@ def main() -> None:
                     help="persist the programmed chip artifact")
     ap.add_argument("--load-program", default=None, metavar="DIR",
                     help="serve a saved chip draw (implies --analog)")
-    args = ap.parse_args()
+    return ap
+
+
+def validate_args(ap: argparse.ArgumentParser, args) -> None:
+    """Reject mutually-inconsistent flag combinations with clear errors."""
     if args.per_call and not args.analog:
         ap.error("--per-call only qualifies --analog (pass both)")
     if args.load_program and args.per_call:
@@ -167,6 +200,19 @@ def main() -> None:
     if args.refresh_below is not None and args.no_ref_check:
         ap.error("--refresh-below triggers on the top-1 agreement counter "
                  "(drop --no-ref-check)")
+    if args.request_trace is not None and args.per_call:
+        ap.error("--request-trace serves through the compiled-program "
+                 "engine; --per-call is the legacy rectangle path")
+    if args.request_trace is not None and args.request_trace < 1:
+        ap.error("--request-trace needs at least one request")
+    if args.request_trace is not None:
+        frontend = configs.get_smoke(args.arch).frontend
+        if frontend in ("audio_frames", "vision_patches"):
+            ap.error(f"--request-trace serves token prompts; the "
+                     f"{frontend} frontend ({args.arch}) needs the "
+                     "rectangle path")
+    if args.arrival_rate is not None and args.request_trace is None:
+        ap.error("--arrival-rate paces a --request-trace (pass both)")
     if args.refresh_below is not None and args.load_program:
         # the artifact deliberately stores no pre-programming weights (the
         # chip is the artifact); refresh rewrites from THIS process's
@@ -177,6 +223,12 @@ def main() -> None:
               "from this process's deterministic source weights; if the "
               "artifact was programmed from different weights, a refresh "
               "will rewrite a different model", file=sys.stderr)
+
+
+def main() -> None:
+    ap = build_parser()
+    args = ap.parse_args()
+    validate_args(ap, args)
     schedule = None
     if args.drift_schedule:
         try:
@@ -192,6 +244,11 @@ def main() -> None:
             ap.error(str(e))
 
     cfg = configs.get_smoke(args.arch)
+    if cfg.n_codebooks:
+        # musicgen-style decoders emit one token per codebook per step; the
+        # request-level engine drives a single token stream
+        ap.error(f"--arch {args.arch}: multi-codebook decoders are not "
+                 "servable through the token-stream engine")
     analog = args.analog or args.load_program is not None
     t0_seconds = (schedule.times[0] if schedule is not None
                   else args.t_hours * 3600.0)
@@ -257,7 +314,10 @@ def main() -> None:
               f"t={pcm_lib.format_age(t0_seconds)})")
     if program is not None:
         params, acfg = program.params, program.cfg
-        if args.save_program and schedule is None:
+        # schedule/trace runs save AFTER serving (the chip may age en
+        # route); everything else saves the freshly compiled/loaded chip
+        if (args.save_program and schedule is None
+                and args.request_trace is None):
             path = store.save_program(args.save_program, program)
             print(f"saved programmed chip artifact to {path}")
     if args.use_kernel:
@@ -269,123 +329,39 @@ def main() -> None:
             acfg, use_kernel=True,
             interpret=jax.default_backend() != "tpu",
         )
-    needs_rng = acfg.needs_rng
 
     b, s = args.batch, args.prompt_len
     s_max = s + args.tokens
-
-    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
-    if cfg.frontend == "audio_frames":
-        batch = {"frames": jax.random.normal(key, (b, s, cfg.d_model), cfg.dtype)}
+    patches = None
     if cfg.frontend == "vision_patches":
-        batch["patches"] = jax.random.normal(
+        # independent per-request images (sliced per rid below)
+        patches = jax.random.normal(
             key, (b, cfg.num_patches, cfg.d_model), cfg.dtype
         )
-
-    @jax.jit
-    def decode(params, tokens, cache, rng):
-        logits, cache = lm.lm_forward(
-            params, {"tokens": tokens}, acfg, cfg, cache=cache,
-            rng=rng if needs_rng else None,
-        )
-        logits = logits[:, -1]
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, cache
+        s_max += cfg.num_patches
 
     # Digital full-precision reference, teacher-forced on the analog token
     # stream: at every emitted position the two models see identical inputs,
     # so top-1 agreement / logit MSE isolate the analog (quantization + PCM)
     # error -- the accuracy axis of the paper's bitwidth trade (Sec. 7).
-    # Counters are running sums (device scalars), not stored logits: the
-    # full-vocab logit history would be O(tokens * batch * vocab) host RAM.
     ref_check = analog and not args.no_ref_check
-    if ref_check:
-        dig = AnalogConfig()
-
-        @jax.jit
-        def ref_decode(params, tokens, cache):
-            logits, cache = lm.lm_forward(
-                params, {"tokens": tokens}, dig, cfg, cache=cache
-            )
-            return logits[:, -1], cache
-
-        @jax.jit
-        def count_step(a, r):
-            a, r = a.astype(jnp.float32), r.astype(jnp.float32)
-            agree = jnp.sum(
-                (jnp.argmax(a, axis=-1) == jnp.argmax(r, axis=-1)).astype(
-                    jnp.float32
-                )
-            )
-            return agree, jnp.sum((a - r) ** 2)
-
-    def serve_pass(params):
-        """One full prefill + decode pass -> timing/accuracy metrics.
-
-        The jitted decode/ref_decode closures take params as an argument,
-        so serving the same chip at several drift ages (values change,
-        shapes do not) re-traces nothing.
-        """
-        agree_sum = err_sum = jnp.zeros((), jnp.float32)
-        n_decisions = n_elems = 0
-
-        def accumulate(a, r):
-            nonlocal agree_sum, err_sum, n_decisions, n_elems
-            agree, err = count_step(a, r)
-            agree_sum = agree_sum + agree
-            err_sum = err_sum + err
-            n_decisions += int(math.prod(a.shape[:-1]))
-            n_elems += a.size
-
-        cache = init_lm_cache(cfg, b, s_max, cfg.dtype)
-        t0 = time.time()
-        logits, cache = lm.lm_forward(
-            params, batch, acfg, cfg, cache=cache, last_token_only=True,
-            rng=key if needs_rng else None,
-        )
-        cache = unstack_cache(cache)
-        t_prefill = time.time() - t0
-
-        if ref_check:
-            ref_cache = init_lm_cache(cfg, b, s_max, cfg.dtype)
-            ref_logit, ref_cache = lm.lm_forward(
-                ref_params, batch, dig, cfg, cache=ref_cache,
-                last_token_only=True,
-            )
-            ref_cache = unstack_cache(ref_cache)
-            accumulate(logits[:, -1], ref_logit[:, -1])
-
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out = [tok]
-        t0 = time.time()
-        for i in range(args.tokens - 1):
-            tok, step_logits, cache = decode(
-                params, tok, cache, jax.random.fold_in(key, i)
-            )
-            tok = tok[:, None]
-            if ref_check:
-                ref_logit, ref_cache = ref_decode(ref_params, out[-1], ref_cache)
-                accumulate(step_logits, ref_logit)
-            out.append(tok)
-        jax.block_until_ready(tok)
-        m = {
-            "t_prefill": t_prefill,
-            "t_decode": time.time() - t0,
-            "seqs": jnp.concatenate(out, axis=1),
-        }
-        if ref_check:
-            m["top1"] = float(agree_sum) / max(n_decisions, 1)
-            m["mse"] = float(err_sum) / max(n_elems, 1)
-            m["decisions"] = n_decisions
-        return m
+    served = ServingEngine(
+        cfg, acfg, params,
+        n_slots=b, s_max=s_max, program=program,
+        ref_params=ref_params if ref_check else None,
+        src_params=src_params, mesh=mesh, rng=key,
+    )
 
     def fmt_timing(m):
-        return (f"prefill={m['t_prefill']*1e3:.1f}ms "
-                f"decode={m['t_decode']/max(args.tokens-1,1)*1e3:.2f}"
-                "ms/token")
+        per_tok = m.t_decode / max(m.n_steps, 1) * 1e3
+        return (f"prefill={m.t_prefill*1e3:.1f}ms "
+                f"decode={per_tok:.2f}ms/token")
 
     def fmt_counters(m):
-        return (f"top1_agreement={m['top1']:.4f} "
-                f"logit_mse={m['mse']:.6e} decisions={m['decisions']}")
+        c = m.counters
+        return (f"top1_agreement={c['top1']:.4f} "
+                f"logit_mse={c['logit_mse']:.6e} "
+                f"decisions={c['decisions']}")
 
     def print_pass(m):
         print(f"arch={cfg.name} analog={analog} mode={acfg.mode} "
@@ -393,8 +369,63 @@ def main() -> None:
         if ref_check:
             print(f"accuracy_vs_digital_ref: {fmt_counters(m)}")
 
+    if args.request_trace is not None:
+        # Continuous batching: variable-length requests through the slot
+        # scheduler; with a --drift-schedule the chip ages (and refreshes)
+        # BETWEEN decode steps of this single run via the DriftPolicy.
+        trace = poisson_trace(
+            jax.random.PRNGKey(7), args.request_trace,
+            vocab=cfg.vocab, rate=args.arrival_rate,
+            prompt_lens=trace_prompt_buckets(s),
+            new_tokens=(max(1, min(8, args.tokens)), args.tokens),
+        )
+        if cfg.family == "moe":
+            print("warning: MoE capacity routing pools tokens across the "
+                  "decode batch, so continuous-batching generations are "
+                  "not bit-identical to solo serving for this family",
+                  file=sys.stderr)
+        policy = None
+        if schedule is not None:
+            est_steps = sum(r.max_new_tokens for r in trace) // max(b, 1)
+            policy = DriftPolicy(
+                schedule,
+                every_steps=max(1, est_steps // max(len(schedule), 1)),
+                refresh_below=args.refresh_below,
+            )
+        report = served.run(trace, drift_policy=policy)
+        for ev in report.age_events:
+            if ev["kind"] == "age":
+                print(f"drift_age step={ev['step']} t={ev['t_wall']:.0f}s "
+                      f"({pcm_lib.format_age(ev['t_device'])} device age)")
+            else:
+                print(f"drift_event step={ev['step']} reprogram: "
+                      f"top1_agreement={ev['top1']:.4f} < "
+                      f"refresh_below={args.refresh_below}")
+        print(report.summary())
+        if ref_check:
+            print(f"accuracy_vs_digital_ref: {fmt_counters(report)}")
+        if args.save_program and program is not None:
+            path = store.save_program(args.save_program, served.program)
+            print(f"saved programmed chip artifact to {path}")
+        longest = max(report.records, key=lambda r: r.n_new)
+        print("generated token ids (longest request):",
+              longest.tokens[: min(16, longest.n_new)].tolist())
+        return
+
+    def rectangle_requests():
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+        return [
+            Request(
+                rid=i, prompt=np.asarray(toks[i]),
+                max_new_tokens=args.tokens,
+                features=(None if patches is None
+                          else {"patches": patches[i : i + 1]}),
+            )
+            for i in range(b)
+        ]
+
     if schedule is None:
-        m = serve_pass(params)
+        m = served.run(rectangle_requests())
         print_pass(m)
     else:
         # Drift-lifecycle serving: ONE chip ages in place across the
@@ -409,53 +440,45 @@ def main() -> None:
         m = None
         for i, t_age in enumerate(schedule):
             if i > 0:
-                # schedule ages are wall-clock deployment times; a chip
-                # rewritten at wall age t_r is YOUNGER than the deployment:
-                # its device age at wall age t is t - t_r (floored at t_c),
-                # so a refresh genuinely resets the drift clock instead of
-                # being erased by the next absolute-age evaluation
-                dev_age = (t_age if refresh_wall is None
-                           else max(t_age - refresh_wall, pcm_lib.T_C))
-                if dev_age != program.t_seconds:
-                    program = engine.age_program(program, dev_age)
-                    params = program.params
+                # schedule ages are wall-clock deployment times; a refresh
+                # genuinely resets the drift clock instead of being erased
+                # by the next absolute-age evaluation (engine.device_age)
+                served.age_to(engine.device_age(t_age, refresh_wall))
             line = (f"drift_age t={t_age:.0f}s "
                     f"({pcm_lib.format_age(t_age)})")
             if refresh_wall is not None:
-                line += f" chip_age={pcm_lib.format_age(program.t_seconds)}"
-            m = serve_pass(params)
+                line += f" chip_age={pcm_lib.format_age(served.program.t_seconds)}"
+            m = served.run(rectangle_requests())
             line += f": {fmt_timing(m)}"
             if ref_check:
                 line += " " + fmt_counters(m)
             print(line)
             if (args.refresh_below is not None
-                    and m["top1"] < args.refresh_below):
+                    and m.counters["top1"] < args.refresh_below):
                 reprograms += 1
                 refresh_wall = t_age
                 print(f"drift_event t={t_age:.0f}s reprogram: "
-                      f"top1_agreement={m['top1']:.4f} < "
+                      f"top1_agreement={m.counters['top1']:.4f} < "
                       f"refresh_below={args.refresh_below}; rewriting chip "
                       f"from stored weights (chip age resets to "
                       f"{pcm_lib.format_age(pcm_lib.T_C)})")
-                program = steps.refresh_program(
-                    program, src_params,
-                    jax.random.fold_in(jax.random.PRNGKey(43), reprograms),
-                    mesh=mesh, model_cfg=cfg,
+                served.refresh(
+                    jax.random.fold_in(jax.random.PRNGKey(43), reprograms)
                 )
-                params = program.params
         delta = engine.program_event_count() - events0
         print(f"drift_lifecycle: ages={len(schedule)} "
               f"reprograms={reprograms} program_events_delta={delta} "
-              f"final_age={pcm_lib.format_age(program.t_seconds)}")
+              f"final_age={pcm_lib.format_age(served.program.t_seconds)}")
         if args.save_program:
-            path = store.save_program(args.save_program, program)
+            path = store.save_program(args.save_program, served.program)
             hist = ",".join(pcm_lib.format_age(t)
-                            for t in program.age_history)
+                            for t in served.program.age_history)
             print(f"saved programmed chip artifact at final age "
                   f"(age_history={hist}) to {path}")
         print_pass(m)
+    seq0 = m.tokens_of(0)
     print("generated token ids (first sequence):",
-          m["seqs"][0, : min(16, m["seqs"].shape[1])].tolist())
+          seq0[: min(16, seq0.size)].tolist())
 
 
 if __name__ == "__main__":

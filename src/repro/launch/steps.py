@@ -11,6 +11,11 @@ the param tree into a CiMProgram (PCM chain applied a single time) -- and
 feed the returned (program.params, program.cfg) to the prefill/serve steps.
 The per-call ``pcm_infer`` mode re-simulates programming on every forward
 and exists for statistical accuracy sweeps, not serving.
+
+Request-level serving (slot scheduling, continuous batching, drift-policy
+hooks) lives one layer up in :mod:`repro.serving`: ``ServingEngine`` owns
+one compiled program and drives the prefill/decode lifecycle itself;
+:func:`refresh_program` below is what its refresh policy calls.
 """
 
 from __future__ import annotations

@@ -31,7 +31,11 @@ NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: Array  # (B, S_max, n_kv, hd)
     v: Array  # (B, S_max, n_kv, hd)
-    length: Array  # () int32 -- tokens already written
+    #: tokens already written. () int32 for a rectangle batch (every row
+    #: advances in lockstep); (B,) int32 for a *slot* cache (continuous-
+    #: batching serving, repro.serving), where each batch row is an
+    #: independent request at its own position.
+    length: Array
 
 
 def attn_init(key: Array, cfg: ModelConfig) -> dict:
@@ -185,11 +189,14 @@ def decode_attention(
     scale = d**-0.5
     s = _gqa_scores(q, cache.k) * scale  # (B, Kv, G, 1, S_max)
     pos = jnp.arange(s_max)
-    if rolling:
-        valid = pos[None, :] < jnp.minimum(cache.length, s_max)
+    limit = jnp.minimum(cache.length, s_max) if rolling else cache.length
+    if cache.length.ndim:
+        # per-slot lengths: each batch row is an independent request
+        valid = pos[None, :] < limit[:, None]  # (B, S_max)
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     else:
-        valid = pos[None, :] < cache.length
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        valid = pos[None, :] < limit
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return _gqa_values(p, cache.v).astype(q.dtype)
 
@@ -245,8 +252,16 @@ def attn_apply(
     elif cache is not None and s == 1:
         # decode: append to cache (circular slot for window buffers)
         idx = cache.length % s_cache if rolling else cache.length
-        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
+        if cache.length.ndim:
+            # per-slot lengths: each row writes at its own position
+            def _put(c, u, i):
+                return jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+
+            ck = jax.vmap(_put)(cache.k, k.astype(cache.k.dtype), idx)
+            cv = jax.vmap(_put)(cache.v, v.astype(cache.v.dtype), idx)
+        else:
+            ck = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
         new_cache = KVCache(ck, cv, cache.length + 1)
         out = decode_attention(q, new_cache, rolling=rolling)
     elif cache is not None:
@@ -288,10 +303,12 @@ def attn_apply(
     return linear_apply(params["wo"], out, ctx), new_cache
 
 
-def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> KVCache:
+def init_cache(
+    cfg: ModelConfig, batch: int, s_max: int, dtype, per_slot: bool = False
+) -> KVCache:
     shape = (batch, s_max, cfg.n_kv_heads, cfg.hd)
     return KVCache(
         k=jnp.zeros(shape, dtype),
         v=jnp.zeros(shape, dtype),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,) if per_slot else (), jnp.int32),
     )

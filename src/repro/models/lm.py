@@ -173,7 +173,10 @@ def _block_apply(
     return x, new_cache
 
 
-def _block_cache(kind: str, cfg: ModelConfig, batch: int, s_max: int, dtype):
+def _block_cache(
+    kind: str, cfg: ModelConfig, batch: int, s_max: int, dtype,
+    per_slot: bool = False,
+):
     if kind == "ssm":
         return ssm_lib.init_ssm_cache(cfg, batch, dtype)
     if kind == "rec":
@@ -182,7 +185,7 @@ def _block_cache(kind: str, cfg: ModelConfig, batch: int, s_max: int, dtype):
     # feasibility for the hybrid family rests on this bound.
     if cfg.family == "hybrid":
         s_max = min(s_max, cfg.local_window)
-    return attn_lib.init_cache(cfg, batch, s_max, dtype)
+    return attn_lib.init_cache(cfg, batch, s_max, dtype, per_slot=per_slot)
 
 
 # ---------------------------------------------------------------------------
@@ -279,7 +282,12 @@ def lm_forward(
     else:
         group_caches, tail_caches = None, None
         start = 0
-    positions = start + jnp.arange(s)[None, :]  # (1, S) broadcasts over batch
+    if getattr(start, "ndim", 0):
+        # per-slot cache (continuous-batching serving): every batch row is
+        # an independent request at its own position -> (B, S) positions
+        positions = start[:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = start + jnp.arange(s)[None, :]  # (1, S) broadcasts
 
     def group_fn(h, group_params, group_cache, group_idx):
         ctx = AnalogCtx(
@@ -389,28 +397,45 @@ def lm_forward(
 
 
 def _cache_length(group_caches, tail_caches) -> Array:
-    """Recover the current sequence position from any attention cache."""
+    """Recover the current sequence position from any attention cache.
 
-    def find(c):
+    Returns a scalar for rectangle-batch caches. For a *slot* cache
+    (unstacked layout with per-slot ``KVCache.length`` of shape (B,), see
+    :func:`init_lm_cache`), returns the (B,) vector so positions are
+    computed per request. Stacked caches prepend a layer axis to the
+    length, which is stripped (every layer agrees on the position).
+    """
+    stacked_groups = not isinstance(group_caches, list)
+
+    def find(c, stacked):
         if isinstance(c, attn_lib.KVCache):
             ln = c.length
-            return ln.reshape(-1)[0] if ln.ndim else ln
+            if stacked and ln.ndim:
+                ln = ln[0]  # strip the layer-stack axis
+            return ln
         return None
 
-    for leaf in jax.tree.leaves(
-        (group_caches, tail_caches),
-        is_leaf=lambda x: isinstance(
-            x, (attn_lib.KVCache, ssm_lib.SSMCache, griffin_lib.RGLRUCache)
-        ),
+    is_cache = lambda x: isinstance(
+        x, (attn_lib.KVCache, ssm_lib.SSMCache, griffin_lib.RGLRUCache)
+    )
+    for container, stacked in (
+        (group_caches, stacked_groups),
+        (tail_caches, False),
     ):
-        ln = find(leaf)
-        if ln is not None:
-            return ln
+        for leaf in jax.tree.leaves(container, is_leaf=is_cache):
+            ln = find(leaf, stacked)
+            if ln is not None:
+                return ln
     return jnp.zeros((), jnp.int32)  # pure-SSM models are position-free
 
 
 def init_lm_cache(
-    cfg: ModelConfig, batch: int, s_max: int, dtype, stacked: bool = True
+    cfg: ModelConfig,
+    batch: int,
+    s_max: int,
+    dtype,
+    stacked: bool = True,
+    per_slot: bool = False,
 ) -> tuple:
     """Build the (group caches, tail caches) pytree.
 
@@ -419,14 +444,26 @@ def init_lm_cache(
     the decode layout, where each layer's in-place token write touches only
     its own buffer (a whole-stack dynamic-update-slice costs full-buffer
     traffic in the XLA cost model and defeats donation analysis).
+
+    ``per_slot=True`` (requires ``stacked=False``): the continuous-batching
+    *slot* layout (repro.serving) -- attention lengths become (B,) vectors
+    so every batch row is an independent request at its own position, and
+    :func:`write_cache_slot` / :func:`reset_cache_slot` admit/retire one
+    request without touching the other slots.
     """
+    if per_slot and stacked:
+        raise ValueError(
+            "per_slot caches use the unstacked decode layout "
+            "(pass stacked=False)"
+        )
     period = block_period(cfg)
     n_groups = cfg.n_layers // len(period)
     n_tail = cfg.n_layers - n_groups * len(period)
 
     def one_group():
         return tuple(
-            _block_cache(kind, cfg, batch, s_max, dtype) for kind in period
+            _block_cache(kind, cfg, batch, s_max, dtype, per_slot=per_slot)
+            for kind in period
         )
 
     if stacked:
@@ -437,7 +474,10 @@ def init_lm_cache(
     else:
         groups = [one_group() for _ in range(n_groups)]
     tail = tuple(
-        _block_cache(period[i % len(period)], cfg, batch, s_max, dtype)
+        _block_cache(
+            period[i % len(period)], cfg, batch, s_max, dtype,
+            per_slot=per_slot,
+        )
         for i in range(n_tail)
     )
     return groups, tail
@@ -453,6 +493,55 @@ def unstack_cache(cache: tuple) -> tuple:
         jax.tree.map(lambda x, _i=i: x[_i], groups) for i in range(n_groups)
     ]
     return out, tail
+
+
+# ---------------------------------------------------------------------------
+# Cache-slot helpers (continuous-batching serving, repro.serving)
+#
+# The serving engine owns ONE per-slot decode cache (init_lm_cache with
+# stacked=False, per_slot=True) whose batch rows are independent request
+# slots. Admitting a request = prefill it alone (batch=1, standard stacked
+# cache), unstack, and write every leaf's row into the slot; retiring =
+# zero the slot. Both are whole-row, static-shape updates, so one jitted
+# computation serves every (slot, request) combination.
+# ---------------------------------------------------------------------------
+
+
+def write_cache_slot(cache: tuple, src: tuple, slot) -> tuple:
+    """Write a single-request cache into batch row ``slot`` of a slot cache.
+
+    ``cache``: the shared per-slot decode cache (B slots, unstacked layout,
+    per-slot lengths). ``src``: the request's own batch=1 cache in the same
+    unstacked layout (prefill + :func:`unstack_cache`), built with the SAME
+    ``s_max`` so rows line up. The request's scalar cache length lands in
+    the slot's entry of the (B,) length vector; everything else (KV rows,
+    SSM/RG-LRU states) is a full-row copy.
+    """
+
+    def write(dst, s):
+        if dst.ndim == s.ndim:  # (B, ...) <- (1, ...) row copy
+            return jax.lax.dynamic_update_index_in_dim(
+                dst, s[0].astype(dst.dtype), slot, 0
+            )
+        # per-slot length vector (B,) <- the request's scalar length
+        return dst.at[slot].set(s.astype(dst.dtype))
+
+    return jax.tree.map(write, cache, src)
+
+
+def reset_cache_slot(cache: tuple, slot) -> tuple:
+    """Zero batch row ``slot`` of a per-slot cache (retired-slot hygiene).
+
+    A retired slot keeps stepping with the live batch (its output is
+    discarded), so its buffers hold garbage; resetting before re-admission
+    keeps the invariant that a freshly admitted request sees exactly the
+    state a solo run would.
+    """
+
+    def reset(leaf):
+        return leaf.at[slot].set(jnp.zeros(leaf.shape[1:], leaf.dtype))
+
+    return jax.tree.map(reset, cache)
 
 
 # ---------------------------------------------------------------------------

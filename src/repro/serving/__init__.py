@@ -1,0 +1,47 @@
+"""repro.serving -- request-level serving over one programmed CiM chip.
+
+Architecture (one PR-4-era ``serve_pass`` rectangle, refactored into three
+layers):
+
+* ``requests.py``  -- the client surface: :class:`Request` (variable-length
+  prompt, token budget, EOS, arrival time), :class:`RequestRecord` (what a
+  retired request hands back), and :func:`poisson_trace` (the synthetic
+  variable-length workload with optional Poisson arrivals).
+* ``scheduler.py`` -- admission policy only: :class:`ContinuousScheduler`
+  (refill any free slot immediately -- the decode batch stays full under
+  variable-length traffic) vs :class:`StaticBatchScheduler` (classic wave
+  batching, the padded baseline the benchmarks compare against).
+* ``engine.py``    -- :class:`ServingEngine`: owns ONE compiled
+  ``CiMProgram`` (or digital params), a slot-based KV cache with per-slot
+  lengths (``models.lm``: ``init_lm_cache(per_slot=True)`` +
+  ``write_cache_slot``/``reset_cache_slot``), one jitted decode stepping
+  all slots, optional digital-reference accuracy counters, and the drift
+  lifecycle hooks (:meth:`ServingEngine.age_to`, :class:`DriftPolicy`,
+  refresh) -- so a long-running server ages the paper's programmed chip in
+  place while it serves, with zero programming events asserted.
+
+Continuous batching here is *semantically inert*: slots are independent
+(admission prefills a request alone; decode advances each slot at its own
+cache position), so per-request generations are bit-identical to serving
+the request alone on a fresh engine -- only throughput changes. The
+``benchmarks/serving_bench.py`` rows quantify it. One exception: MoE
+capacity routing pools tokens across the decode batch (keep/drop competes
+for expert capacity), so for the moe family co-scheduled requests can
+route differently than solo ones -- serve.py warns when a trace targets an
+MoE arch.
+"""
+
+from repro.serving.engine import (  # noqa: F401
+    DriftPolicy,
+    ServeReport,
+    ServingEngine,
+)
+from repro.serving.requests import (  # noqa: F401
+    Request,
+    RequestRecord,
+    poisson_trace,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    ContinuousScheduler,
+    StaticBatchScheduler,
+)

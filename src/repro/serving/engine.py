@@ -1,0 +1,567 @@
+"""Continuous-batching serving engine over ONE programmed CiM chip.
+
+The always-on deployment of the paper (Secs. 5-7) programs a PCM chip once
+and then answers an unbounded request stream while the devices drift. The
+:class:`ServingEngine` is that deployment as code: it owns one compiled
+:class:`~repro.core.engine.CiMProgram` (or plain digital params), a
+slot-based KV cache (``models.lm.init_lm_cache(..., per_slot=True)``: B
+independent request slots with per-slot lengths), and a decode loop in
+which ONE jitted step advances every active slot together.
+
+Lifecycle of a request (see ``serving/scheduler.py`` for admission):
+
+  1. *admit*  -- the request is prefilled ALONE (batch=1, its exact prompt
+     length) and the resulting cache is written into a free slot
+     (``models.lm.write_cache_slot``); the prefill's greedy token seeds the
+     slot's decode stream.
+  2. *decode* -- every engine step runs one jitted forward over all slots;
+     per-slot cache lengths keep each request at its own position, so a
+     freshly admitted 8-token request and a 100-tokens-deep one share the
+     same batch.
+  3. *retire* -- on EOS or the request's token budget the slot is recorded,
+     reset (``models.lm.reset_cache_slot``), and immediately re-admittable.
+
+Because slots are independent (no cross-batch coupling outside MoE
+capacity routing), a request's generation is bit-identical to serving it
+alone on a fresh engine -- continuous batching is semantically inert; it
+only changes *when* work happens, never *what* is computed. Tests pin this.
+
+The engine composes with the drift lifecycle: :meth:`age_to` advances the
+chip between decode steps via ``engine.age_program`` (zero programming
+events, asserted), and a :class:`DriftPolicy` does it on a step cadence
+inside :meth:`run`, optionally triggering ``steps.refresh_program`` when
+the running top-1 agreement vs the digital reference degrades -- a
+long-running server reproducing the paper's programmed-chip lifetime
+while it serves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as engine_mod
+from repro.core.analog import AnalogConfig
+from repro.core.engine import CiMProgram, DriftSchedule
+from repro.models.common import ModelConfig
+from repro.models.lm import (
+    init_lm_cache,
+    lm_forward,
+    reset_cache_slot,
+    unstack_cache,
+    write_cache_slot,
+)
+from repro.serving.requests import Request, RequestRecord
+from repro.serving.scheduler import ContinuousScheduler
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftPolicy:
+    """Age the served chip on a decode-step cadence inside :meth:`run`.
+
+    Every ``every_steps`` decode steps the engine advances the chip to the
+    next age of ``schedule`` (the program is assumed compiled at the
+    schedule's first age, exactly like ``serve.py --drift-schedule``).
+    Ages are *wall* deployment times: after a refresh the device age is
+    ``max(t_wall - t_refresh_wall, t_c)``, so a rewritten chip is genuinely
+    younger than the deployment.
+
+    ``refresh_below``: when the top-1 agreement vs the digital reference
+    over the segment since the last tick drops below this threshold, the
+    chip is reprogrammed from the engine's stored source weights
+    (``steps.refresh_program``) before the next age applies. Requires the
+    engine to run with ``ref_params`` and ``src_params``.
+    """
+
+    schedule: DriftSchedule
+    every_steps: int
+    refresh_below: Optional[float] = None
+
+    def __post_init__(self):
+        if self.every_steps < 1:
+            raise ValueError("DriftPolicy.every_steps must be >= 1")
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    tokens: list[int]
+    admit_step: int
+    admit_t: float
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Everything a serving run produced: outputs, counters, and metrics."""
+
+    records: list[RequestRecord]
+    scheduler: str
+    n_slots: int
+    n_steps: int  # decode steps
+    slot_steps: int  # sum over steps of active slots
+    t_prefill: float
+    t_decode: float
+    wall: float
+    counters: Optional[dict]  # {"top1", "logit_mse", "decisions"} or None
+    age_events: list[dict]
+    reprograms: int
+    program_events_delta: int  # beyond what refreshes account for: always 0
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.records)
+
+    @property
+    def n_generated(self) -> int:
+        return sum(r.n_new for r in self.records)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.n_generated / max(self.wall, 1e-9)
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.n_requests / max(self.wall, 1e-9)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of decode slots holding a live request."""
+        return self.slot_steps / max(self.n_steps * self.n_slots, 1)
+
+    def latency_s(self, pct: float) -> float:
+        """Arrival-to-retirement latency percentile (seconds)."""
+        if not self.records:
+            return 0.0
+        return float(np.percentile([r.latency_s for r in self.records], pct))
+
+    def tokens_of(self, rid: int) -> np.ndarray:
+        for r in self.records:
+            if r.rid == rid:
+                return r.tokens
+        raise KeyError(rid)
+
+    def summary(self) -> str:
+        line = (
+            f"serving: mode={self.scheduler} requests={self.n_requests} "
+            f"tokens={self.n_generated} steps={self.n_steps} "
+            f"tokens_per_s={self.tokens_per_s:.1f} "
+            f"requests_per_s={self.requests_per_s:.2f} "
+            f"occupancy={self.occupancy:.3f} "
+            f"p50_ms={self.latency_s(50) * 1e3:.0f} "
+            f"p95_ms={self.latency_s(95) * 1e3:.0f} "
+            f"reprograms={self.reprograms} "
+            f"program_events_delta={self.program_events_delta}"
+        )
+        if self.counters is not None:
+            line += (
+                f" top1_agreement={self.counters['top1']:.4f}"
+                f" logit_mse={self.counters['logit_mse']:.6e}"
+            )
+        return line
+
+
+class ServingEngine:
+    """Request-level serving over one model (programmed chip or digital).
+
+    ``analog_cfg``/``params`` are what the forward pass executes --
+    for a compiled chip use :meth:`for_program` (or pass ``program=``),
+    which also enables :meth:`age_to`/:class:`DriftPolicy`. ``ref_params``
+    switches on the accuracy counters: a digital full-precision reference
+    decoded in lockstep, teacher-forced on the served token stream (the
+    same counters ``serve.py`` always printed). ``src_params`` is the
+    refresh policy's reprogramming source.
+    """
+
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        analog_cfg: AnalogConfig,
+        params: Any,
+        *,
+        n_slots: int,
+        s_max: int,
+        program: Optional[CiMProgram] = None,
+        ref_params: Any = None,
+        src_params: Any = None,
+        mesh: Any = None,
+        rng: Optional[Array] = None,
+    ):
+        if model_cfg.n_codebooks:
+            raise NotImplementedError(
+                "request-level serving drives a single token stream; "
+                "multi-codebook decoders are not supported"
+            )
+        if n_slots < 1:
+            raise ValueError("need at least one decode slot")
+        self.cfg = model_cfg
+        self.acfg = analog_cfg
+        self.params = params
+        self.program = program
+        self.n_slots = int(n_slots)
+        self.s_max = int(s_max)
+        self.ref_params = ref_params
+        self.src_params = src_params
+        self.mesh = mesh
+        self.rng = jax.random.PRNGKey(0) if rng is None else rng
+        self.reprograms = 0
+
+        cfg, acfg, s_full = self.cfg, self.acfg, self.s_max
+
+        def prefill(params, batch, rng):
+            cache = init_lm_cache(cfg, 1, s_full, cfg.dtype)
+            logits, cache = lm_forward(
+                params, batch, acfg, cfg, cache=cache, last_token_only=True,
+                rng=rng if acfg.needs_rng else None,
+            )
+            last = logits[:, -1]
+            tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            return tok, last, unstack_cache(cache)
+
+        def decode(params, tok, cache, rng):
+            logits, cache = lm_forward(
+                params, {"tokens": tok}, acfg, cfg, cache=cache,
+                rng=rng if acfg.needs_rng else None,
+            )
+            last = logits[:, -1]
+            return jnp.argmax(last, axis=-1).astype(jnp.int32), last, cache
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(2,))
+        # donate the shared cache: admission/retirement touch one slot row
+        # but without donation XLA copies the whole multi-layer buffer
+        self._write_slot = jax.jit(write_cache_slot, donate_argnums=(0,))
+        self._reset_slot = jax.jit(reset_cache_slot, donate_argnums=(0,))
+
+        self._ref = ref_params is not None
+        if self._ref:
+            dig = AnalogConfig()  # digital full-precision reference
+
+            def ref_prefill(params, batch):
+                cache = init_lm_cache(cfg, 1, s_full, cfg.dtype)
+                logits, cache = lm_forward(
+                    params, batch, dig, cfg, cache=cache,
+                    last_token_only=True,
+                )
+                return logits[:, -1], unstack_cache(cache)
+
+            def ref_decode(params, tok, cache):
+                logits, cache = lm_forward(
+                    params, {"tokens": tok}, dig, cfg, cache=cache
+                )
+                return logits[:, -1], cache
+
+            def count(a, r):
+                a, r = a.astype(jnp.float32), r.astype(jnp.float32)
+                agree = (
+                    jnp.argmax(a, axis=-1) == jnp.argmax(r, axis=-1)
+                ).astype(jnp.float32)
+                return agree, jnp.sum((a - r) ** 2, axis=-1)
+
+            self._ref_prefill = jax.jit(ref_prefill)
+            self._ref_decode = jax.jit(ref_decode, donate_argnums=(2,))
+            self._count = jax.jit(count)
+
+    # -- chip lifecycle ----------------------------------------------------
+
+    @classmethod
+    def for_program(
+        cls,
+        program: CiMProgram,
+        model_cfg: ModelConfig,
+        **kw,
+    ) -> "ServingEngine":
+        """Engine over a compiled chip: executes (program.params, .cfg)."""
+        return cls(
+            model_cfg, program.cfg, program.params, program=program, **kw
+        )
+
+    def set_program(self, program: CiMProgram) -> None:
+        """Swap in a new evaluation of the chip (values change, shapes
+        don't -- the jitted closures never re-trace)."""
+        self.program = program
+        self.params = program.params
+
+    def age_to(self, t_seconds: float) -> None:
+        """Age the served chip in place (zero programming events,
+        asserted by ``engine.age_program``)."""
+        if self.program is None:
+            raise RuntimeError("no compiled program to age (digital engine)")
+        if float(t_seconds) != self.program.t_seconds:
+            self.set_program(engine_mod.age_program(self.program, t_seconds))
+
+    def refresh(self, key: Array) -> int:
+        """Reprogram the chip from the stored source weights.
+
+        Returns the number of per-layer programming events consumed, which
+        :meth:`run` adds to its allowance so the zero-delta assertion still
+        holds across a refresh.
+        """
+        from repro.launch import steps
+
+        if self.program is None or self.src_params is None:
+            raise RuntimeError(
+                "refresh needs a compiled program and src_params"
+            )
+        before = engine_mod.program_event_count()
+        self.set_program(
+            steps.refresh_program(
+                self.program, self.src_params, key,
+                mesh=self.mesh, model_cfg=self.cfg,
+            )
+        )
+        self.reprograms += 1
+        return engine_mod.program_event_count() - before
+
+    # -- serving -----------------------------------------------------------
+
+    def _prefill_batch(self, req: Request) -> dict:
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        if req.features:
+            batch.update(req.features)
+        return batch
+
+    def run(
+        self,
+        requests: list[Request],
+        *,
+        scheduler: Any = None,
+        drift_policy: Optional[DriftPolicy] = None,
+        now_fn=None,
+        sleep_fn=None,
+        max_steps: Optional[int] = None,
+    ) -> ServeReport:
+        """Serve ``requests`` to completion and return the run's report.
+
+        Each call is a fresh serving run over the engine's (already
+        compiled) closures: slot caches are re-initialized, so runs are
+        independent. ``now_fn``/``sleep_fn`` default to the wall clock;
+        tests inject a virtual clock through them.
+        """
+        scheduler = scheduler or ContinuousScheduler()
+        now_fn = now_fn or time.monotonic
+        sleep_fn = sleep_fn or time.sleep
+        for r in requests:
+            if r.prompt.size + r.max_new_tokens > self.s_max:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({r.prompt.size}) + budget "
+                    f"({r.max_new_tokens}) exceeds the engine's s_max="
+                    f"{self.s_max}"
+                )
+        queue = deque(sorted(requests, key=lambda r: r.arrival_t))
+
+        cache = init_lm_cache(
+            self.cfg, self.n_slots, self.s_max, self.cfg.dtype,
+            stacked=False, per_slot=True,
+        )
+        ref_cache = (
+            init_lm_cache(
+                self.cfg, self.n_slots, self.s_max, self.cfg.dtype,
+                stacked=False, per_slot=True,
+            )
+            if self._ref
+            else None
+        )
+        cur = jnp.zeros((self.n_slots, 1), jnp.int32)
+        slots: list[Optional[_Slot]] = [None] * self.n_slots
+        records: list[RequestRecord] = []
+        steps = slot_steps = 0
+        agree_sum = err_sum = 0.0
+        decisions = 0
+        t_prefill = t_decode = 0.0
+        events0 = engine_mod.program_event_count()
+        allowed_events = 0
+        reprograms0 = self.reprograms
+        age_events: list[dict] = []
+        # drift-policy runtime state
+        pol_idx = 1  # the program is compiled at the schedule's first age
+        last_wall = (
+            drift_policy.schedule.times[0] if drift_policy else None
+        )
+        refresh_wall: Optional[float] = None
+        seg_agree, seg_dec = 0.0, 0
+        t_start = now_fn()
+
+        def retire(i: int, st: _Slot, by: str) -> None:
+            nonlocal cache, ref_cache
+            records.append(
+                RequestRecord(
+                    rid=st.req.rid,
+                    slot=i,
+                    tokens=np.asarray(st.tokens, np.int32),
+                    n_prompt=int(st.req.prompt.size),
+                    admit_step=st.admit_step,
+                    finish_step=steps,
+                    arrival_t=st.req.arrival_t,
+                    admit_t=st.admit_t,
+                    finish_t=now_fn() - t_start,
+                    finished_by=by,
+                )
+            )
+            cache = self._reset_slot(cache, jnp.int32(i))
+            if self._ref:
+                ref_cache = self._reset_slot(ref_cache, jnp.int32(i))
+            slots[i] = None
+
+        def maybe_retire(i: int) -> None:
+            st = slots[i]
+            if st.req.eos_id is not None and st.tokens[-1] == st.req.eos_id:
+                retire(i, st, "eos")
+            elif len(st.tokens) >= st.req.max_new_tokens:
+                retire(i, st, "max_tokens")
+
+        while queue or any(s is not None for s in slots):
+            now = now_fn() - t_start
+            n_arrived = sum(1 for r in queue if r.arrival_t <= now)
+            free = [i for i, s in enumerate(slots) if s is None]
+            n_admit = scheduler.admit(
+                n_arrived, len(free), self.n_slots - len(free)
+            )
+            # a scheduler cannot over-admit: a slot never serves two live
+            # requests, and only arrived requests are admissible
+            n_admit = min(n_admit, n_arrived, len(free))
+            for _ in range(n_admit):
+                req = queue.popleft()
+                slot = free.pop(0)
+                t0 = now_fn()
+                tok0, logits0, pcache = self._prefill(
+                    self.params,
+                    self._prefill_batch(req),
+                    jax.random.fold_in(self.rng, 1_000_000 + req.rid),
+                )
+                cache = self._write_slot(cache, pcache, jnp.int32(slot))
+                cur = cur.at[slot, 0].set(tok0[0])
+                if self._ref:
+                    r_logits, r_pcache = self._ref_prefill(
+                        self.ref_params, self._prefill_batch(req)
+                    )
+                    ref_cache = self._write_slot(
+                        ref_cache, r_pcache, jnp.int32(slot)
+                    )
+                    a, e = self._count(logits0, r_logits)
+                    agree_sum += float(a[0])
+                    err_sum += float(e[0])
+                    decisions += 1
+                    seg_agree += float(a[0])
+                    seg_dec += 1
+                t_prefill += now_fn() - t0
+                slots[slot] = _Slot(
+                    req, [int(tok0[0])], steps, now_fn() - t_start
+                )
+                maybe_retire(slot)
+
+            if not any(s is not None for s in slots):
+                if not queue:
+                    break
+                # idle: every queued request is still in flight to us
+                wait = queue[0].arrival_t - (now_fn() - t_start)
+                sleep_fn(max(min(wait, 0.01), 1e-4))
+                continue
+
+            t0 = now_fn()
+            nxt, logits, cache = self._decode(
+                self.params, cur, cache, jax.random.fold_in(self.rng, steps)
+            )
+            if self._ref:
+                r_logits, ref_cache = self._ref_decode(
+                    self.ref_params, cur, ref_cache
+                )
+                a_v, e_v = self._count(logits, r_logits)
+                a_np, e_np = np.asarray(a_v), np.asarray(e_v)
+            nxt_np = np.asarray(nxt)
+            t_decode += now_fn() - t0
+            steps += 1
+            active = [i for i, s in enumerate(slots) if s is not None]
+            slot_steps += len(active)
+            for i in active:
+                slots[i].tokens.append(int(nxt_np[i]))
+                if self._ref:
+                    agree_sum += float(a_np[i])
+                    err_sum += float(e_np[i])
+                    decisions += 1
+                    seg_agree += float(a_np[i])
+                    seg_dec += 1
+            cur = nxt[:, None]
+            for i in active:
+                maybe_retire(i)
+
+            if drift_policy is not None and steps % drift_policy.every_steps == 0:
+                # refresh check on the segment served since the last tick
+                if (
+                    drift_policy.refresh_below is not None
+                    and self._ref
+                    and seg_dec > 0
+                    and seg_agree / seg_dec < drift_policy.refresh_below
+                ):
+                    top1 = seg_agree / seg_dec
+                    allowed_events += self.refresh(
+                        jax.random.fold_in(self.rng, 7_000_000 + steps)
+                    )
+                    refresh_wall = last_wall
+                    age_events.append(
+                        {
+                            "kind": "reprogram",
+                            "step": steps,
+                            "top1": top1,
+                            "t_device": self.program.t_seconds,
+                        }
+                    )
+                seg_agree, seg_dec = 0.0, 0
+                if pol_idx < len(drift_policy.schedule.times):
+                    t_wall = drift_policy.schedule.times[pol_idx]
+                    pol_idx += 1
+                    last_wall = t_wall
+                    dev = engine_mod.device_age(t_wall, refresh_wall)
+                    self.age_to(dev)
+                    age_events.append(
+                        {
+                            "kind": "age",
+                            "step": steps,
+                            "t_wall": t_wall,
+                            "t_device": dev,
+                        }
+                    )
+
+            if max_steps is not None and steps >= max_steps:
+                raise RuntimeError(
+                    f"serving run exceeded max_steps={max_steps} with "
+                    f"{sum(s is not None for s in slots)} live slots and "
+                    f"{len(queue)} queued requests"
+                )
+
+        wall = now_fn() - t_start
+        delta = engine_mod.program_event_count() - events0
+        if self.program is not None and delta != allowed_events:
+            raise RuntimeError(
+                f"serving run recorded {delta} programming events but "
+                f"refreshes account for {allowed_events} -- the programmed "
+                "chip must never be rewritten by serving itself"
+            )
+        counters = None
+        if self._ref:
+            counters = {
+                "top1": agree_sum / max(decisions, 1),
+                "logit_mse": err_sum / max(decisions * self.cfg.vocab, 1),
+                "decisions": decisions,
+            }
+        return ServeReport(
+            records=records,
+            scheduler=getattr(scheduler, "name", type(scheduler).__name__),
+            n_slots=self.n_slots,
+            n_steps=steps,
+            slot_steps=slot_steps,
+            t_prefill=t_prefill,
+            t_decode=t_decode,
+            wall=wall,
+            counters=counters,
+            age_events=age_events,
+            reprograms=self.reprograms - reprograms0,
+            program_events_delta=delta - allowed_events,
+        )

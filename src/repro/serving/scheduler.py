@@ -1,0 +1,51 @@
+"""Admission schedulers for the slot-based serving engine.
+
+The engine exposes a deliberately small scheduling surface: once per step
+it shows the scheduler how many queued requests have *arrived* and how many
+decode slots are free, and the scheduler answers how many to admit (the
+engine admits FIFO -- arrival order, ties by submission order). Two
+policies cover the serving spectrum the benchmarks compare:
+
+* :class:`ContinuousScheduler` -- continuous batching: any arrived request
+  enters any free slot immediately, so retired slots are refilled
+  mid-flight and the decode batch stays full under variable-length
+  traffic.
+* :class:`StaticBatchScheduler` -- classic wave batching: a new batch is
+  admitted only when EVERY slot is free, so the whole wave pads to its
+  slowest request. This is the ``serve_static_batch`` baseline; the gap to
+  continuous batching is exactly the tail-of-wave idling.
+
+Invariants (pinned by tests/test_serving_engine.py):
+* a slot never serves two live requests -- admissions are bounded by the
+  free-slot count, and the engine assigns each admission a distinct free
+  slot;
+* retired slots are reset before re-admission (engine-side, see
+  ``models.lm.reset_cache_slot``);
+* admission order is FIFO over arrived requests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ContinuousScheduler:
+    """Admit every arrived request a free slot can take, immediately."""
+
+    name: str = "continuous"
+
+    def admit(self, n_arrived: int, n_free: int, n_active: int) -> int:
+        return min(n_arrived, n_free)
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticBatchScheduler:
+    """Wave batching: admit a fresh batch only when all slots are free."""
+
+    name: str = "static"
+
+    def admit(self, n_arrived: int, n_free: int, n_active: int) -> int:
+        if n_active:
+            return 0  # the wave must drain completely first
+        return min(n_arrived, n_free)

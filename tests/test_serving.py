@@ -1,5 +1,5 @@
 """Serving invariants: prefill + decode == full forward, rolling windows,
-stacked <-> unstacked cache layouts."""
+stacked <-> unstacked cache layouts, and the serve CLI's flag validation."""
 
 import dataclasses
 
@@ -109,3 +109,76 @@ def test_last_token_only_prefill_logits():
     )
     assert last.shape[1] == 1
     assert float(jnp.max(jnp.abs(last[:, 0] - full[:, -1]))) < 5e-3
+
+
+# ------------------------------------------------- serve CLI flag validation
+
+# every mutually-inconsistent combination must die in argument validation
+# (SystemExit from argparse.error), before any model work starts
+BAD_ARGV = {
+    "per_call_without_analog": ["--per-call"],
+    "per_call_with_save_program": [
+        "--analog", "--per-call", "--save-program", "/tmp/x"
+    ],
+    "per_call_with_load_program": [
+        "--analog", "--per-call", "--load-program", "/tmp/x"
+    ],
+    "refresh_below_without_schedule": [
+        "--analog", "--refresh-below", "0.9"
+    ],
+    "refresh_below_with_no_ref_check": [
+        "--analog", "--drift-schedule", "25,3600",
+        "--refresh-below", "0.9", "--no-ref-check",
+    ],
+    "overrides_without_analog": ["--b-adc-overrides", "lm_head=8"],
+    "overrides_with_per_call": [
+        "--analog", "--per-call", "--b-adc-overrides", "lm_head=8"
+    ],
+    "resample_without_program": ["--resample-read-noise"],
+    "schedule_without_analog": ["--drift-schedule", "25,3600"],
+    "schedule_with_per_call": [
+        "--analog", "--per-call", "--drift-schedule", "25,3600"
+    ],
+    "save_program_without_analog": ["--save-program", "/tmp/x"],
+    "arrival_rate_without_trace": ["--analog", "--arrival-rate", "5"],
+    "request_trace_with_per_call": [
+        "--analog", "--per-call", "--request-trace", "4"
+    ],
+    "empty_request_trace": ["--analog", "--request-trace", "0"],
+    "request_trace_with_vlm_frontend": [
+        "--analog", "--arch", "paligemma-3b", "--request-trace", "4"
+    ],
+    "bad_drift_schedule_spec": ["--analog", "--drift-schedule", "bogus"],
+    "bad_b_adc_overrides_spec": [
+        "--analog", "--b-adc-overrides", "lm_head=four"
+    ],
+}
+
+
+@pytest.mark.parametrize("name", sorted(BAD_ARGV))
+def test_serve_cli_rejects_inconsistent_flags(name, monkeypatch, capsys):
+    from repro.launch import serve
+
+    monkeypatch.setattr("sys.argv", ["serve"] + BAD_ARGV[name])
+    with pytest.raises(SystemExit) as exc:
+        serve.main()
+    assert exc.value.code == 2, name
+    err = capsys.readouterr().err
+    assert "error:" in err, (name, err)
+
+
+def test_serve_cli_request_trace_smoke(monkeypatch, capsys):
+    """Continuous batching end-to-end through the CLI: a short Poisson
+    trace over the compiled chip, zero programming events during serving."""
+    from repro.launch import serve
+
+    monkeypatch.setattr(
+        "sys.argv",
+        ["serve", "--analog", "--batch", "2", "--prompt-len", "8",
+         "--tokens", "4", "--request-trace", "3", "--arrival-rate", "200"],
+    )
+    serve.main()
+    out = capsys.readouterr().out
+    assert "serving: mode=continuous requests=3" in out
+    assert "program_events_delta=0" in out
+    assert "accuracy_vs_digital_ref:" in out
