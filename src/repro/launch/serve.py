@@ -76,6 +76,7 @@ from repro.launch import mesh as mesh_lib
 from repro.launch import steps
 from repro.models import lm
 from repro.serving import (
+    BucketedScheduler,
     DriftPolicy,
     Request,
     ServingEngine,
@@ -124,6 +125,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--arrival-rate", type=float, default=None, metavar="R",
                     help="Poisson arrivals at R requests/s for "
                          "--request-trace (default: all queued at t=0)")
+    ap.add_argument("--kv-page-size", type=int, default=None, metavar="P",
+                    help="paged KV cache: serve --request-trace over a "
+                         "shared pool of P-token pages per layer instead "
+                         "of per-slot s_max rectangles; prompts prefill "
+                         "right-padded to a bucket grid (one jit trace per "
+                         "bucket) and admission is length-sorted")
+    ap.add_argument("--kv-pages", type=int, default=None, metavar="N",
+                    help="page-pool size for --kv-page-size (default: the "
+                         "rectangle-equivalent slots*ceil(s_max/P)+1; pass "
+                         "less to serve long prompts at flat memory)")
+    ap.add_argument("--prefill-buckets", default=None, metavar="SPEC",
+                    help="comma list of prefill pad lengths for "
+                         "--kv-page-size (default: geometric 32*2^k grid "
+                         "up to s_max)")
     ap.add_argument("--analog", action="store_true",
                     help="serve through the PCM deployment (program-once)")
     ap.add_argument("--per-call", action="store_true",
@@ -213,6 +228,31 @@ def validate_args(ap: argparse.ArgumentParser, args) -> None:
                      "rectangle path")
     if args.arrival_rate is not None and args.request_trace is None:
         ap.error("--arrival-rate paces a --request-trace (pass both)")
+    if args.kv_page_size is not None and args.request_trace is None:
+        ap.error("--kv-page-size is the paged request-level path "
+                 "(pass --request-trace)")
+    if args.kv_page_size is not None and args.kv_page_size < 1:
+        ap.error("--kv-page-size must be >= 1")
+    if args.kv_page_size is not None:
+        family = configs.get_smoke(args.arch).family
+        if family in ("ssm", "hybrid"):
+            ap.error(f"--kv-page-size pages attention KV caches; the "
+                     f"{family} family ({args.arch}) carries position-free "
+                     "recurrent state that right-padded bucketed prefill "
+                     "would corrupt")
+    if args.kv_pages is not None and args.kv_page_size is None:
+        ap.error("--kv-pages sizes the --kv-page-size pool (pass both)")
+    if args.prefill_buckets is not None and args.kv_page_size is None:
+        ap.error("--prefill-buckets shapes --kv-page-size prefill "
+                 "(pass both)")
+    if args.prefill_buckets is not None:
+        try:
+            buckets = [int(x) for x in args.prefill_buckets.split(",") if x]
+        except ValueError:
+            ap.error(f"bad --prefill-buckets {args.prefill_buckets!r} "
+                     "(want a comma list of integers)")
+        if not buckets or min(buckets) < 1:
+            ap.error("--prefill-buckets needs positive lengths")
     if args.refresh_below is not None and args.load_program:
         # the artifact deliberately stores no pre-programming weights (the
         # chip is the artifact); refresh rewrites from THIS process's
@@ -345,11 +385,23 @@ def main() -> None:
     # so top-1 agreement / logit MSE isolate the analog (quantization + PCM)
     # error -- the accuracy axis of the paper's bitwidth trade (Sec. 7).
     ref_check = analog and not args.no_ref_check
+    paged_kw = {}
+    if args.kv_page_size is not None:
+        paged_kw = dict(
+            paged=True,
+            page_size=args.kv_page_size,
+            n_pages=args.kv_pages,
+            prefill_buckets=(
+                tuple(int(x) for x in args.prefill_buckets.split(",") if x)
+                if args.prefill_buckets else None
+            ),
+        )
     served = ServingEngine(
         cfg, acfg, params,
         n_slots=b, s_max=s_max, program=program,
         ref_params=ref_params if ref_check else None,
         src_params=src_params, mesh=mesh, rng=key,
+        **paged_kw,
     )
 
     def fmt_timing(m):
@@ -392,7 +444,11 @@ def main() -> None:
                 every_steps=max(1, est_steps // max(len(schedule), 1)),
                 refresh_below=args.refresh_below,
             )
-        report = served.run(trace, drift_policy=policy)
+        report = served.run(
+            trace,
+            scheduler=BucketedScheduler() if args.kv_page_size else None,
+            drift_policy=policy,
+        )
         for ev in report.age_events:
             if ev["kind"] == "age":
                 print(f"drift_age step={ev['step']} t={ev['t_wall']:.0f}s "

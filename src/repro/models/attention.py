@@ -96,12 +96,19 @@ def chunked_attention(
     q: (B, Sq, H, D); k, v: (B, Sk, Kv, D). GQA by head grouping. ``window``
     bounds attention to the last ``window`` positions (local attention).
     ``q_offset`` is the absolute position of q[0] (prefill continuation).
+
+    The kv reduction is *shape-stable*: ``kv_chunk`` is never clamped to the
+    sequence length, so a short sequence pads up to one full chunk instead
+    of shrinking the chunk. Padded/masked positions contribute exact zeros
+    to an identically-shaped per-chunk reduction, which makes the outputs at
+    real positions bitwise independent of right-padding -- the property
+    bucketed prefill (repro.serving paged mode) relies on for its
+    generations to be bit-identical to exact-length prefill.
     """
     b, sq, h, d = q.shape
     sk = k.shape[1]
     scale = d**-0.5
     q_chunk = min(q_chunk, sq)
-    kv_chunk = min(kv_chunk, sk)
     sq_p = -(-sq // q_chunk) * q_chunk
     sk_p = -(-sk // kv_chunk) * kv_chunk
     if sq_p != sq:
@@ -201,6 +208,87 @@ def decode_attention(
     return _gqa_values(p, cache.v).astype(q.dtype)
 
 
+class PagedKVCache(NamedTuple):
+    """Block/paged KV cache (the vLLM idiom): a pool of fixed-size pages
+    shared by every request slot, plus a per-slot page table.
+
+    Slots no longer own a worst-case (B, S_max) rectangle -- each holds
+    ``ceil(length / page_size)`` pages, so resident KV memory tracks actual
+    usage, not provisioning. Page id 0 is a reserved *scratch* page: it is
+    never allocated, unused page-table entries point at it, and retired
+    slots (whose pages have been returned to the free list) write their
+    dead decode tokens into it instead of corrupting reassigned pages.
+    """
+
+    k: Array  # (n_pages, page_size, n_kv, hd) -- pool shared by all slots
+    v: Array  # (n_pages, page_size, n_kv, hd)
+    table: Array  # (B, pages_per_slot) int32 page ids; 0 = scratch page
+    length: Array  # (B,) int32 tokens written per slot
+    #: zero-element (s_max, 0) buffer: shape-encodes the slot's virtual
+    #: capacity (the b_adc_buf idiom), so the gathered decode view can be
+    #: sliced to EXACTLY the rectangle an equivalent slot cache would have
+    #: -- reduction shapes match and decode stays bitwise identical.
+    cap_buf: Array
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def s_max(self) -> int:
+        return self.cap_buf.shape[0]
+
+
+def init_paged_cache(
+    cfg: ModelConfig,
+    batch: int,
+    s_max: int,
+    dtype,
+    *,
+    page_size: int,
+    n_pages: int,
+) -> PagedKVCache:
+    """One layer's page pool + per-slot tables (pool id space is shared
+    across layers: the serving allocator hands out one page id that is
+    valid in every layer's pool)."""
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    pages_per_slot = -(-s_max // page_size)
+    if n_pages < 2:
+        raise ValueError(
+            f"n_pages={n_pages}: need the scratch page plus at least one "
+            "usable page"
+        )
+    # NOTE: n_pages may be much smaller than batch * pages_per_slot (that
+    # is the point: s_max is VIRTUAL capacity); the serving engine's
+    # admission reservations keep actual usage within the pool.
+    shape = (n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return PagedKVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        table=jnp.zeros((batch, pages_per_slot), jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+        cap_buf=jnp.zeros((s_max, 0), jnp.int32),
+    )
+
+
+def paged_view(cache: PagedKVCache) -> KVCache:
+    """Gather the pool through the page tables into a rectangular
+    (B, s_max) slot-cache view.
+
+    Pure data movement (gather + reshape + slice, no arithmetic), sliced to
+    the shape-encoded virtual capacity: attention over the view is bitwise
+    identical to attention over a rectangular slot cache holding the same
+    tokens. Positions past a slot's length read scratch/garbage rows and
+    are masked to exact-zero probability by :func:`decode_attention`.
+    """
+    b, pages_per_slot = cache.table.shape
+    ps = cache.page_size
+    k = cache.k[cache.table].reshape(b, pages_per_slot * ps, *cache.k.shape[2:])
+    v = cache.v[cache.table].reshape(b, pages_per_slot * ps, *cache.v.shape[2:])
+    return KVCache(k[:, : cache.s_max], v[:, : cache.s_max], cache.length)
+
+
 def attn_apply(
     params: dict,
     x: Array,
@@ -228,6 +316,36 @@ def attn_apply(
     q = shard(q, "batch", None, "heads", None)
     k = shard(k, "batch", None, "kv_heads", None)
     v = shard(v, "batch", None, "kv_heads", None)
+
+    if isinstance(cache, PagedKVCache):
+        if s != 1:
+            raise NotImplementedError(
+                "paged caches are decode-only: prefill a request alone into "
+                "a rectangular cache and scatter it into pages "
+                "(models.lm.write_cache_slot_paged)"
+            )
+        if window is not None:
+            raise NotImplementedError(
+                "local-window attention keeps its bounded rolling buffer; "
+                "paging applies to global-attention caches only"
+            )
+        # decode: write this token's K/V row at (page, offset) of each
+        # slot's current position, then attend over the gathered view --
+        # the same values a rectangular slot cache would hold, so the
+        # attention math is bitwise identical (see paged_view).
+        ps = cache.page_size
+        page = jnp.take_along_axis(
+            cache.table, (cache.length // ps)[:, None], axis=1, mode="clip"
+        )[:, 0]  # (B,) -- OOB entries of retired slots clip to scratch
+        off = cache.length % ps
+        ck = cache.k.at[page, off].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[page, off].set(v[:, 0].astype(cache.v.dtype))
+        new_cache = PagedKVCache(
+            ck, cv, cache.table, cache.length + 1, cache.cap_buf
+        )
+        out = decode_attention(q, paged_view(new_cache))
+        out = out.reshape(b, s, nh * hd)
+        return linear_apply(params["wo"], out, ctx), new_cache
 
     new_cache = None
     s_cache = (

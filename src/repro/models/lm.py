@@ -176,6 +176,9 @@ def _block_apply(
 def _block_cache(
     kind: str, cfg: ModelConfig, batch: int, s_max: int, dtype,
     per_slot: bool = False,
+    paged: bool = False,
+    page_size: int = 16,
+    n_pages: int = 0,
 ):
     if kind == "ssm":
         return ssm_lib.init_ssm_cache(cfg, batch, dtype)
@@ -185,6 +188,10 @@ def _block_cache(
     # feasibility for the hybrid family rests on this bound.
     if cfg.family == "hybrid":
         s_max = min(s_max, cfg.local_window)
+    if paged:
+        return attn_lib.init_paged_cache(
+            cfg, batch, s_max, dtype, page_size=page_size, n_pages=n_pages
+        )
     return attn_lib.init_cache(cfg, batch, s_max, dtype, per_slot=per_slot)
 
 
@@ -262,13 +269,17 @@ def lm_forward(
     rng: Optional[Array] = None,
     cache: Optional[tuple] = None,
     last_token_only: bool = False,
+    last_index: Optional[Array] = None,
 ):
     """Forward pass. Returns (logits, new_cache).
 
     ``cache`` is (stacked_group_caches, tail_caches) or None. When
     ``last_token_only`` (prefill serving), only the final position's logits
     are computed -- at 32k x 152k vocab the full logits tensor would be
-    hundreds of GB.
+    hundreds of GB. ``last_index`` (a (B,) int vector, requires
+    ``last_token_only``) picks each row's logit position explicitly --
+    bucketed prefill right-pads prompts to a shared length, so row ``i``'s
+    real last token sits at ``len_i - 1``, not at ``-1``.
     """
     period = block_period(cfg)
     ctx0 = AnalogCtx(cfg=analog_cfg, gain_s=params.gain_s, key=rng)
@@ -384,7 +395,10 @@ def lm_forward(
 
     h = rmsnorm_apply(params.final_norm, h, cfg.norm_eps)
     if last_token_only:
-        h = h[:, -1:, :]
+        if last_index is not None:
+            h = jnp.take_along_axis(h, last_index[:, None, None], axis=1)
+        else:
+            h = h[:, -1:, :]
     logits = linear_apply(params.lm_head, h, ctx0)
     logits = shard(logits, "batch", None, "vocab")
     if cfg.n_codebooks:
@@ -408,6 +422,8 @@ def _cache_length(group_caches, tail_caches) -> Array:
     stacked_groups = not isinstance(group_caches, list)
 
     def find(c, stacked):
+        if isinstance(c, attn_lib.PagedKVCache):
+            return c.length  # always (B,): paged caches are per-slot
         if isinstance(c, attn_lib.KVCache):
             ln = c.length
             if stacked and ln.ndim:
@@ -416,7 +432,13 @@ def _cache_length(group_caches, tail_caches) -> Array:
         return None
 
     is_cache = lambda x: isinstance(
-        x, (attn_lib.KVCache, ssm_lib.SSMCache, griffin_lib.RGLRUCache)
+        x,
+        (
+            attn_lib.KVCache,
+            attn_lib.PagedKVCache,
+            ssm_lib.SSMCache,
+            griffin_lib.RGLRUCache,
+        ),
     )
     for container, stacked in (
         (group_caches, stacked_groups),
@@ -436,6 +458,9 @@ def init_lm_cache(
     dtype,
     stacked: bool = True,
     per_slot: bool = False,
+    paged: bool = False,
+    page_size: int = 16,
+    n_pages: Optional[int] = None,
 ) -> tuple:
     """Build the (group caches, tail caches) pytree.
 
@@ -450,19 +475,48 @@ def init_lm_cache(
     so every batch row is an independent request at its own position, and
     :func:`write_cache_slot` / :func:`reset_cache_slot` admit/retire one
     request without touching the other slots.
+
+    ``paged=True`` (requires ``stacked=False``): the block/paged slot layout
+    (repro.serving paged mode) -- every attention leaf becomes a
+    :class:`repro.models.attention.PagedKVCache` sharing one page-id space
+    of ``n_pages`` pages (default: enough to hold ``batch`` max-length
+    slots plus the reserved scratch page 0), with ``s_max`` the per-slot
+    *virtual* capacity. Slot admission/retirement goes through
+    :func:`write_cache_slot_paged` / :func:`free_cache_slot_paged` with
+    page ids handed out by the serving engine's allocator.
     """
     if per_slot and stacked:
         raise ValueError(
             "per_slot caches use the unstacked decode layout "
             "(pass stacked=False)"
         )
+    if paged:
+        if stacked:
+            raise ValueError(
+                "paged caches use the unstacked decode layout "
+                "(pass stacked=False)"
+            )
+        kinds = set(block_period(cfg))
+        if not kinds <= {"attn", "moe"}:
+            raise ValueError(
+                "paged serving supports attention-cache families only "
+                f"(family={cfg.family!r} has blocks {sorted(kinds)}): "
+                "SSM/RG-LRU recurrent state is position-free, so the "
+                "right-padded bucketed prefill that paging relies on would "
+                "fold pad tokens into it"
+            )
+        if n_pages is None:
+            n_pages = batch * (-(-s_max // page_size)) + 1
     period = block_period(cfg)
     n_groups = cfg.n_layers // len(period)
     n_tail = cfg.n_layers - n_groups * len(period)
 
     def one_group():
         return tuple(
-            _block_cache(kind, cfg, batch, s_max, dtype, per_slot=per_slot)
+            _block_cache(
+                kind, cfg, batch, s_max, dtype, per_slot=per_slot,
+                paged=paged, page_size=page_size, n_pages=n_pages or 0,
+            )
             for kind in period
         )
 
@@ -477,6 +531,7 @@ def init_lm_cache(
         _block_cache(
             period[i % len(period)], cfg, batch, s_max, dtype,
             per_slot=per_slot,
+            paged=paged, page_size=page_size, n_pages=n_pages or 0,
         )
         for i in range(n_tail)
     )
@@ -542,6 +597,100 @@ def reset_cache_slot(cache: tuple, slot) -> tuple:
         return leaf.at[slot].set(jnp.zeros(leaf.shape[1:], leaf.dtype))
 
     return jax.tree.map(reset, cache)
+
+
+# ---------------------------------------------------------------------------
+# Paged-cache slot helpers (repro.serving paged mode)
+#
+# The engine owns ONE paged decode cache (init_lm_cache with stacked=False,
+# paged=True): per attention layer a page pool + per-slot page tables, one
+# shared page-id space (the allocator hands out ids valid in every layer).
+# Admission scatters a request's rectangular prefill cache into its pages;
+# growth appends a page id to the slot's table; retirement zeroes the
+# slot's pages/table/length so the ids can be reissued.
+# ---------------------------------------------------------------------------
+
+_is_paged = lambda x: isinstance(x, attn_lib.PagedKVCache)
+
+
+def write_cache_slot_paged(
+    cache: tuple, src: tuple, slot, row, pages, length
+) -> tuple:
+    """Scatter one request's prefill cache into slot ``slot``'s pages.
+
+    ``src`` is a *rectangular* prefill cache in the unstacked layout
+    (bucketed prefill + :func:`unstack_cache`) with ``S_bucket`` rows per
+    attention leaf; ``row`` picks the request's batch row (bucketed
+    prefill batches several same-bucket requests). ``pages`` is a
+    (ceil(S_bucket/page_size),) int32 vector of page ids for this slot --
+    entries past the request's real ``ceil(length/page_size)`` pages are
+    0, so the pad-region rows of a short prompt land in the scratch page
+    instead of costing real pages. ``length`` is the request's true token
+    count; decode masks everything past it, so pad-position K/V inside
+    the slot's last real page is inert.
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+    nbp = pages.shape[0]
+    length = jnp.asarray(length, jnp.int32)
+
+    def write(dst: attn_lib.PagedKVCache, s_leaf: attn_lib.KVCache):
+        ps = dst.page_size
+
+        def scatter(pool, rows):
+            rows = rows[row].astype(pool.dtype)  # (S_bucket, kv, hd)
+            pad = nbp * ps - rows.shape[0]
+            if pad:
+                rows = jnp.pad(rows, ((0, pad), (0, 0), (0, 0)))
+            return pool.at[pages].set(rows.reshape(nbp, ps, *rows.shape[1:]))
+
+        table_row = (
+            jnp.zeros((dst.table.shape[1],), jnp.int32).at[:nbp].set(pages)
+        )
+        return dst._replace(
+            k=scatter(dst.k, s_leaf.k),
+            v=scatter(dst.v, s_leaf.v),
+            table=dst.table.at[slot].set(table_row),
+            length=dst.length.at[slot].set(length),
+        )
+
+    return jax.tree.map(write, cache, src, is_leaf=_is_paged)
+
+
+def append_cache_page(cache: tuple, slot, entry, page) -> tuple:
+    """Grow slot ``slot`` by one page: table[slot, entry] = page, all layers.
+
+    Called by the engine when a slot's decode position crosses a page
+    boundary; the page's stale content is never read (positions past the
+    slot's length are masked), so no zeroing is needed on append.
+    """
+
+    def app(dst: attn_lib.PagedKVCache):
+        return dst._replace(table=dst.table.at[slot, entry].set(page))
+
+    return jax.tree.map(app, cache, is_leaf=_is_paged)
+
+
+def free_cache_slot_paged(cache: tuple, slot, pages) -> tuple:
+    """Retire slot ``slot``: zero its pages, table row, and length.
+
+    ``pages`` is a fixed-width (pages_per_slot,) int32 vector -- the slot's
+    real page ids padded with 0s (re-zeroing the scratch page is harmless).
+    Zeroing the pool rows keeps the invariant that a freshly admitted
+    request sees exactly the state a solo run would, and pins the
+    "free leaves other slots' pages bitwise untouched" property.
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+
+    def free(dst: attn_lib.PagedKVCache):
+        z = jnp.zeros((pages.shape[0],) + dst.k.shape[1:], dst.k.dtype)
+        return dst._replace(
+            k=dst.k.at[pages].set(z),
+            v=dst.v.at[pages].set(z),
+            table=dst.table.at[slot].set(0),
+            length=dst.length.at[slot].set(0),
+        )
+
+    return jax.tree.map(free, cache, is_leaf=_is_paged)
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,13 @@ layers):
 * ``scheduler.py`` -- admission policy only: :class:`ContinuousScheduler`
   (refill any free slot immediately -- the decode batch stays full under
   variable-length traffic) vs :class:`StaticBatchScheduler` (classic wave
-  batching, the padded baseline the benchmarks compare against).
+  batching, the padded baseline the benchmarks compare against) vs
+  :class:`BucketedScheduler` (continuous admission in prompt-length order,
+  so the paged engine's bucketed prefill batches same-bucket requests).
+* ``paging.py``    -- :class:`PageAllocator`, the engine-side free list
+  over one page-id space shared by every attention layer's pool (page 0
+  is the reserved scratch page), plus the geometric prefill-bucket grid
+  (:func:`default_buckets`/:func:`bucket_for`).
 * ``engine.py``    -- :class:`ServingEngine`: owns ONE compiled
   ``CiMProgram`` (or digital params), a slot-based KV cache with per-slot
   lengths (``models.lm``: ``init_lm_cache(per_slot=True)`` +
@@ -20,15 +26,29 @@ layers):
   refresh) -- so a long-running server ages the paper's programmed chip in
   place while it serves, with zero programming events asserted.
 
+  With ``paged=True`` the slot rectangles become a block/paged KV cache
+  (``models.attention.PagedKVCache``): resident memory is the page pool,
+  not ``n_slots * s_max``, so ``s_max`` turns into a *virtual* per-slot
+  capacity and long-prompt traffic serves at flat memory. Admission
+  right-pads prompts to a geometric bucket grid and prefills same-bucket
+  requests together, bounding jit prefill traces by the bucket count
+  (``ServeReport.n_prefill_traces``) instead of the number of distinct
+  prompt lengths.
+
 Continuous batching here is *semantically inert*: slots are independent
 (admission prefills a request alone; decode advances each slot at its own
 cache position), so per-request generations are bit-identical to serving
 the request alone on a fresh engine -- only throughput changes. The
-``benchmarks/serving_bench.py`` rows quantify it. One exception: MoE
-capacity routing pools tokens across the decode batch (keep/drop competes
-for expert capacity), so for the moe family co-scheduled requests can
-route differently than solo ones -- serve.py warns when a trace targets an
-MoE arch.
+``benchmarks/serving_bench.py`` rows quantify it. Paged serving preserves
+the same invariant: the paged decode view gathers exactly the rectangle a
+slot cache would hold, and right-padded prefill is bitwise inert because
+the chunked-attention kv reduction is shape-stable -- so generations stay
+bit-identical to the rectangular engine on the same frozen chip draw.
+One exception: MoE capacity routing pools tokens across the decode batch
+(keep/drop competes for expert capacity), so for the moe family
+co-scheduled requests can route differently than solo ones -- serve.py
+warns when a trace targets an MoE arch (paged prefill therefore drops to
+one request per call for MoE periods).
 """
 
 from repro.serving.engine import (  # noqa: F401
@@ -36,12 +56,18 @@ from repro.serving.engine import (  # noqa: F401
     ServeReport,
     ServingEngine,
 )
+from repro.serving.paging import (  # noqa: F401
+    PageAllocator,
+    bucket_for,
+    default_buckets,
+)
 from repro.serving.requests import (  # noqa: F401
     Request,
     RequestRecord,
     poisson_trace,
 )
 from repro.serving.scheduler import (  # noqa: F401
+    BucketedScheduler,
     ContinuousScheduler,
     StaticBatchScheduler,
 )

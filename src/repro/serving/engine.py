@@ -49,18 +49,34 @@ import numpy as np
 from repro.core import engine as engine_mod
 from repro.core.analog import AnalogConfig
 from repro.core.engine import CiMProgram, DriftSchedule
+from repro.models import attention as attn_lib
 from repro.models.common import ModelConfig
 from repro.models.lm import (
+    append_cache_page,
+    block_period,
+    free_cache_slot_paged,
     init_lm_cache,
     lm_forward,
     reset_cache_slot,
     unstack_cache,
     write_cache_slot,
+    write_cache_slot_paged,
 )
+from repro.serving.paging import PageAllocator, bucket_for, default_buckets
 from repro.serving.requests import Request, RequestRecord
 from repro.serving.scheduler import ContinuousScheduler
 
 Array = jax.Array
+
+
+def _kv_cache_bytes(cache) -> int:
+    """Resident K/V bytes of a decode cache (rectangular or paged)."""
+    kinds = (attn_lib.KVCache, attn_lib.PagedKVCache)
+    total = 0
+    for leaf in jax.tree.leaves(cache, is_leaf=lambda x: isinstance(x, kinds)):
+        if isinstance(leaf, kinds):
+            total += leaf.k.nbytes + leaf.v.nbytes
+    return total
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +112,11 @@ class _Slot:
     tokens: list[int]
     admit_step: int
     admit_t: float
+    # paged mode: page ids this slot currently owns, and how many more
+    # pages of the pool are reserved (but not yet allocated) for its
+    # worst-case growth -- see ServingEngine.run
+    pages: Optional[list] = None
+    reserve_left: int = 0
 
 
 @dataclasses.dataclass
@@ -114,6 +135,16 @@ class ServeReport:
     age_events: list[dict]
     reprograms: int
     program_events_delta: int  # beyond what refreshes account for: always 0
+    #: distinct prefill shapes this ENGINE has jit-compiled so far (one
+    #: trace per shape). Bucketed prefill bounds this by the bucket count;
+    #: exact-length prefill grows it with every distinct prompt length.
+    n_prefill_traces: int = 0
+    #: resident K/V bytes of the decode cache -- the slot rectangles, or
+    #: the page pools in paged mode (buffers are statically allocated, so
+    #: resident == peak)
+    peak_kv_bytes: int = 0
+    #: paged mode: allocator high-water mark (pages), else 0
+    peak_pages_in_use: int = 0
 
     @property
     def n_requests(self) -> int:
@@ -142,6 +173,12 @@ class ServeReport:
             return 0.0
         return float(np.percentile([r.latency_s for r in self.records], pct))
 
+    def ttft_s(self, pct: float) -> float:
+        """Time-to-first-token percentile (seconds)."""
+        if not self.records:
+            return 0.0
+        return float(np.percentile([r.ttft_s for r in self.records], pct))
+
     def tokens_of(self, rid: int) -> np.ndarray:
         for r in self.records:
             if r.rid == rid:
@@ -157,6 +194,9 @@ class ServeReport:
             f"occupancy={self.occupancy:.3f} "
             f"p50_ms={self.latency_s(50) * 1e3:.0f} "
             f"p95_ms={self.latency_s(95) * 1e3:.0f} "
+            f"p95_ttft_ms={self.ttft_s(95) * 1e3:.0f} "
+            f"prefill_traces={self.n_prefill_traces} "
+            f"kv_mib={self.peak_kv_bytes / 2**20:.1f} "
             f"reprograms={self.reprograms} "
             f"program_events_delta={self.program_events_delta}"
         )
@@ -178,6 +218,24 @@ class ServingEngine:
     decoded in lockstep, teacher-forced on the served token stream (the
     same counters ``serve.py`` always printed). ``src_params`` is the
     refresh policy's reprogramming source.
+
+    ``paged=True`` switches the slot cache to the block/paged layout:
+    ``s_max`` becomes the per-slot VIRTUAL capacity while resident KV
+    memory is ``n_pages * page_size`` rows per layer (default: the same
+    footprint as the rectangle, ``n_slots * ceil(s_max/page_size) + 1``
+    pages -- pass a smaller pool to serve long-prompt traffic at flat
+    memory). Prefill is *bucketed*: prompts are right-padded to
+    ``prefill_buckets`` (default: a geometric 32*2^k grid up to
+    ``s_max``) and same-bucket admissions share one padded prefill call.
+    ``prefill_batch`` sets the row count at the SMALLEST bucket; larger
+    buckets batch proportionally fewer rows (a constant prefill token
+    budget, so a lone long prompt never pays for dummy rows), and each
+    bucket has exactly one ``(rows, bucket)`` shape -- the engine
+    compiles at most one prefill trace per bucket. ``prefill_batch`` is
+    forced to 1 when
+    the analog config draws per-request noise (per-rid rng keys) or the
+    period contains MoE blocks (capacity routing couples batch rows);
+    both keep paged serving bit-identical to the rectangular engine.
     """
 
     def __init__(
@@ -193,6 +251,11 @@ class ServingEngine:
         src_params: Any = None,
         mesh: Any = None,
         rng: Optional[Array] = None,
+        paged: bool = False,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        prefill_buckets: Optional[tuple] = None,
+        prefill_batch: int = 4,
     ):
         if model_cfg.n_codebooks:
             raise NotImplementedError(
@@ -212,6 +275,65 @@ class ServingEngine:
         self.mesh = mesh
         self.rng = jax.random.PRNGKey(0) if rng is None else rng
         self.reprograms = 0
+        #: distinct prefill shapes jitted by this engine (one trace each)
+        self._prefill_shapes: set = set()
+
+        self.paged = bool(paged)
+        if self.paged:
+            if model_cfg.frontend in ("audio_frames", "vision_patches"):
+                raise NotImplementedError(
+                    "bucketed prefill pads token prompts; feature-fed "
+                    f"frontends ({model_cfg.frontend!r}) are not supported "
+                    "in paged mode"
+                )
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if prefill_batch < 1:
+                raise ValueError(
+                    f"prefill_batch must be >= 1, got {prefill_batch}"
+                )
+            self.page_size = int(page_size)
+            self.pages_per_slot = -(-self.s_max // self.page_size)
+            self.n_pages = int(
+                n_pages
+                if n_pages is not None
+                else self.n_slots * self.pages_per_slot + 1
+            )
+            buckets = (
+                tuple(prefill_buckets)
+                if prefill_buckets
+                else default_buckets(self.s_max)
+            )
+            self.prefill_buckets = tuple(
+                sorted({min(int(b), self.s_max) for b in buckets} | {self.s_max})
+            )
+            if min(self.prefill_buckets) < 1:
+                raise ValueError(
+                    f"prefill buckets must be >= 1: {self.prefill_buckets}"
+                )
+            # per-request rng keys and MoE capacity routing both couple a
+            # prefill batch's rows to its composition; solo prefill keeps
+            # paged serving bit-identical to the rectangular engine
+            if analog_cfg.needs_rng or "moe" in block_period(model_cfg):
+                prefill_batch = 1
+            self.prefill_batch = int(prefill_batch)
+            # constant prefill TOKEN budget: ``prefill_batch`` rows at the
+            # smallest bucket, fewer rows as buckets grow (a lone long
+            # prompt padded to a fixed row count would pay row_count times
+            # its prefill FLOPs in dummy rows -- measured as a 2.4x p95
+            # TTFT regression). One (rows, bucket) shape per bucket keeps
+            # the trace bound at len(prefill_buckets).
+            budget = self.prefill_batch * min(self.prefill_buckets)
+            self._pb_of = {
+                b: max(1, min(self.prefill_batch, budget // b))
+                for b in self.prefill_buckets
+            }
+            # early family validation (same check init_lm_cache applies)
+            init_lm_cache(
+                model_cfg, 1, self.page_size, model_cfg.dtype,
+                stacked=False, paged=True,
+                page_size=self.page_size, n_pages=2,
+            )
 
         cfg, acfg, s_full = self.cfg, self.acfg, self.s_max
 
@@ -239,6 +361,34 @@ class ServingEngine:
         # but without donation XLA copies the whole multi-layer buffer
         self._write_slot = jax.jit(write_cache_slot, donate_argnums=(0,))
         self._reset_slot = jax.jit(reset_cache_slot, donate_argnums=(0,))
+
+        if self.paged:
+
+            def prefill_bucket(params, toks, last_idx, rng):
+                # (PB, S_bucket) right-padded prompts; one jit trace per
+                # bucket length. last_idx picks each row's true final
+                # position (padding makes row ends differ).
+                pb, sb = toks.shape
+                cache = init_lm_cache(cfg, pb, sb, cfg.dtype)
+                logits, cache = lm_forward(
+                    params, {"tokens": toks}, acfg, cfg, cache=cache,
+                    last_token_only=True, last_index=last_idx,
+                    rng=rng if acfg.needs_rng else None,
+                )
+                last = logits[:, -1]
+                tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+                return tok, last, unstack_cache(cache)
+
+            self._prefill_bucket = jax.jit(prefill_bucket)
+            self._write_slot_paged = jax.jit(
+                write_cache_slot_paged, donate_argnums=(0,)
+            )
+            self._append_page = jax.jit(
+                append_cache_page, donate_argnums=(0,)
+            )
+            self._free_slot_paged = jax.jit(
+                free_cache_slot_paged, donate_argnums=(0,)
+            )
 
         self._ref = ref_params is not None
         if self._ref:
@@ -355,12 +505,45 @@ class ServingEngine:
                     f"({r.max_new_tokens}) exceeds the engine's s_max="
                     f"{self.s_max}"
                 )
+            if self.paged and r.features:
+                raise NotImplementedError(
+                    f"request {r.rid}: feature-fed prefill is not "
+                    "supported in paged mode (bucketed prefill pads "
+                    "token prompts)"
+                )
+            if self.paged:
+                need = -(
+                    -(r.prompt.size + r.max_new_tokens) // self.page_size
+                )
+                if need > self.n_pages - 1:
+                    raise ValueError(
+                        f"request {r.rid}: worst case needs {need} pages "
+                        f"of {self.page_size} but the pool has only "
+                        f"{self.n_pages - 1} usable -- it could never be "
+                        "admitted"
+                    )
         queue = deque(sorted(requests, key=lambda r: r.arrival_t))
 
-        cache = init_lm_cache(
-            self.cfg, self.n_slots, self.s_max, self.cfg.dtype,
-            stacked=False, per_slot=True,
-        )
+        if self.paged:
+            cache = init_lm_cache(
+                self.cfg, self.n_slots, self.s_max, self.cfg.dtype,
+                stacked=False, paged=True,
+                page_size=self.page_size, n_pages=self.n_pages,
+            )
+            # engine-side page bookkeeping, fresh per run: the free list
+            # plus a reservation counter. Admission reserves a request's
+            # WORST-CASE page count (prompt + full budget), so a request
+            # that got in can always append its growth pages -- mid-flight
+            # pool exhaustion cannot deadlock the decode loop.
+            allocator = PageAllocator(self.n_pages)
+            reserved = 0
+            ps = self.page_size
+        else:
+            cache = init_lm_cache(
+                self.cfg, self.n_slots, self.s_max, self.cfg.dtype,
+                stacked=False, per_slot=True,
+            )
+        peak_kv_bytes = _kv_cache_bytes(cache)
         ref_cache = (
             init_lm_cache(
                 self.cfg, self.n_slots, self.s_max, self.cfg.dtype,
@@ -390,7 +573,7 @@ class ServingEngine:
         t_start = now_fn()
 
         def retire(i: int, st: _Slot, by: str) -> None:
-            nonlocal cache, ref_cache
+            nonlocal cache, ref_cache, reserved
             records.append(
                 RequestRecord(
                     rid=st.req.rid,
@@ -405,7 +588,18 @@ class ServingEngine:
                     finished_by=by,
                 )
             )
-            cache = self._reset_slot(cache, jnp.int32(i))
+            if self.paged:
+                # zero the slot's pages/table/length, then return the ids
+                # (and the unused tail of its reservation) to the pool
+                pvec = np.zeros((self.pages_per_slot,), np.int32)
+                pvec[: len(st.pages)] = st.pages
+                cache = self._free_slot_paged(
+                    cache, jnp.int32(i), jnp.asarray(pvec)
+                )
+                allocator.free(st.pages)
+                reserved -= st.reserve_left
+            else:
+                cache = self._reset_slot(cache, jnp.int32(i))
             if self._ref:
                 ref_cache = self._reset_slot(ref_cache, jnp.int32(i))
             slots[i] = None
@@ -427,35 +621,132 @@ class ServingEngine:
             # a scheduler cannot over-admit: a slot never serves two live
             # requests, and only arrived requests are admissible
             n_admit = min(n_admit, n_arrived, len(free))
-            for _ in range(n_admit):
-                req = queue.popleft()
-                slot = free.pop(0)
-                t0 = now_fn()
-                tok0, logits0, pcache = self._prefill(
-                    self.params,
-                    self._prefill_batch(req),
-                    jax.random.fold_in(self.rng, 1_000_000 + req.rid),
-                )
-                cache = self._write_slot(cache, pcache, jnp.int32(slot))
-                cur = cur.at[slot, 0].set(tok0[0])
-                if self._ref:
-                    r_logits, r_pcache = self._ref_prefill(
-                        self.ref_params, self._prefill_batch(req)
+            # the queue is arrival-sorted, so the arrived requests are its
+            # prefix; a scheduler's ``order`` hook picks WHICH of them
+            # enter (default: FIFO)
+            arrived = [queue[j] for j in range(n_arrived)]
+            order_fn = getattr(scheduler, "order", None)
+            perm = (
+                list(order_fn(arrived)) if order_fn else list(range(n_arrived))
+            )
+            admitted: list[tuple[Request, int]] = []  # (request, queue idx)
+            pending = 0  # pages claimed by this round's earlier admissions
+            for j in perm[:n_admit]:
+                req = arrived[j]
+                if self.paged:
+                    # reserve the worst case up front (head-of-line
+                    # blocking: stop rather than starve a long request)
+                    need = -(-(req.prompt.size + req.max_new_tokens) // ps)
+                    if allocator.n_free - reserved - pending < need:
+                        break
+                    pending += need
+                admitted.append((req, j))
+            for j in sorted((j for _, j in admitted), reverse=True):
+                del queue[j]
+
+            if self.paged:
+                # group consecutive same-bucket admissions into one padded
+                # prefill call of up to prefill_batch rows
+                k0 = 0
+                reqs = [r for r, _ in admitted]
+                while k0 < len(reqs):
+                    sb = bucket_for(
+                        int(reqs[k0].prompt.size), self.prefill_buckets
                     )
-                    ref_cache = self._write_slot(
-                        ref_cache, r_pcache, jnp.int32(slot)
+                    pb = self._pb_of[sb]
+                    chunk = [reqs[k0]]
+                    while (
+                        len(chunk) < pb
+                        and k0 + len(chunk) < len(reqs)
+                        and bucket_for(
+                            int(reqs[k0 + len(chunk)].prompt.size),
+                            self.prefill_buckets,
+                        )
+                        == sb
+                    ):
+                        chunk.append(reqs[k0 + len(chunk)])
+                    k0 += len(chunk)
+                    toks = np.zeros((pb, sb), np.int32)
+                    lens = np.ones((pb,), np.int32)
+                    for j, req in enumerate(chunk):
+                        toks[j, : req.prompt.size] = req.prompt
+                        lens[j] = req.prompt.size
+                    for j in range(len(chunk), pb):
+                        toks[j] = toks[0]  # dummy rows repeat row 0
+                        lens[j] = lens[0]
+                    t0 = now_fn()
+                    self._prefill_shapes.add((pb, sb))
+                    tokv, logitsv, pcache = self._prefill_bucket(
+                        self.params,
+                        jnp.asarray(toks),
+                        jnp.asarray(lens - 1),
+                        jax.random.fold_in(
+                            self.rng, 1_000_000 + chunk[0].rid
+                        ),
                     )
-                    a, e = self._count(logits0, r_logits)
-                    agree_sum += float(a[0])
-                    err_sum += float(e[0])
-                    decisions += 1
-                    seg_agree += float(a[0])
-                    seg_dec += 1
-                t_prefill += now_fn() - t0
-                slots[slot] = _Slot(
-                    req, [int(tok0[0])], steps, now_fn() - t_start
-                )
-                maybe_retire(slot)
+                    for j, req in enumerate(chunk):
+                        slot = free.pop(0)
+                        n_prompt = int(req.prompt.size)
+                        nbp_real = -(-n_prompt // ps)
+                        need = -(-(n_prompt + req.max_new_tokens) // ps)
+                        pages = allocator.alloc(nbp_real)
+                        reserved += need - nbp_real
+                        pvec = np.zeros((-(-sb // ps),), np.int32)
+                        pvec[:nbp_real] = pages
+                        cache = self._write_slot_paged(
+                            cache, pcache, jnp.int32(slot), jnp.int32(j),
+                            jnp.asarray(pvec), jnp.int32(n_prompt),
+                        )
+                        cur = cur.at[slot, 0].set(tokv[j])
+                        if self._ref:
+                            r_logits, r_pcache = self._ref_prefill(
+                                self.ref_params, self._prefill_batch(req)
+                            )
+                            ref_cache = self._write_slot(
+                                ref_cache, r_pcache, jnp.int32(slot)
+                            )
+                            a, e = self._count(logitsv[j : j + 1], r_logits)
+                            agree_sum += float(a[0])
+                            err_sum += float(e[0])
+                            decisions += 1
+                            seg_agree += float(a[0])
+                            seg_dec += 1
+                        slots[slot] = _Slot(
+                            req, [int(tokv[j])], steps, now_fn() - t_start,
+                            pages=pages, reserve_left=need - nbp_real,
+                        )
+                        maybe_retire(slot)
+                    t_prefill += now_fn() - t0
+            else:
+                for req, _ in admitted:
+                    slot = free.pop(0)
+                    t0 = now_fn()
+                    self._prefill_shapes.add((1, int(req.prompt.size)))
+                    tok0, logits0, pcache = self._prefill(
+                        self.params,
+                        self._prefill_batch(req),
+                        jax.random.fold_in(self.rng, 1_000_000 + req.rid),
+                    )
+                    cache = self._write_slot(cache, pcache, jnp.int32(slot))
+                    cur = cur.at[slot, 0].set(tok0[0])
+                    if self._ref:
+                        r_logits, r_pcache = self._ref_prefill(
+                            self.ref_params, self._prefill_batch(req)
+                        )
+                        ref_cache = self._write_slot(
+                            ref_cache, r_pcache, jnp.int32(slot)
+                        )
+                        a, e = self._count(logits0, r_logits)
+                        agree_sum += float(a[0])
+                        err_sum += float(e[0])
+                        decisions += 1
+                        seg_agree += float(a[0])
+                        seg_dec += 1
+                    t_prefill += now_fn() - t0
+                    slots[slot] = _Slot(
+                        req, [int(tok0[0])], steps, now_fn() - t_start
+                    )
+                    maybe_retire(slot)
 
             if not any(s is not None for s in slots):
                 if not queue:
@@ -464,6 +755,25 @@ class ServingEngine:
                 wait = queue[0].arrival_t - (now_fn() - t_start)
                 sleep_fn(max(min(wait, 0.01), 1e-4))
                 continue
+
+            if self.paged:
+                # lazy growth: a slot whose next decode write crosses a
+                # page boundary gets one page off the free list (always
+                # available -- it was reserved at admission)
+                for i, st in enumerate(slots):
+                    if st is None:
+                        continue
+                    pos = int(st.req.prompt.size) + len(st.tokens) - 1
+                    entry = pos // ps
+                    if entry >= len(st.pages):
+                        (page,) = allocator.alloc(1)
+                        reserved -= 1
+                        st.reserve_left -= 1
+                        st.pages.append(page)
+                        cache = self._append_page(
+                            cache, jnp.int32(i), jnp.int32(entry),
+                            jnp.int32(page),
+                        )
 
             t0 = now_fn()
             nxt, logits, cache = self._decode(
@@ -544,6 +854,12 @@ class ServingEngine:
                 f"refreshes account for {allowed_events} -- the programmed "
                 "chip must never be rewritten by serving itself"
             )
+        if self.paged and (allocator.n_in_use or reserved):
+            raise RuntimeError(
+                f"page leak: {allocator.n_in_use} pages still allocated "
+                f"and {reserved} still reserved after every request "
+                "retired -- admit/retire must conserve the free list"
+            )
         counters = None
         if self._ref:
             counters = {
@@ -564,4 +880,7 @@ class ServingEngine:
             age_events=age_events,
             reprograms=self.reprograms - reprograms0,
             program_events_delta=delta - allowed_events,
+            n_prefill_traces=len(self._prefill_shapes),
+            peak_kv_bytes=peak_kv_bytes,
+            peak_pages_in_use=allocator.peak_in_use if self.paged else 0,
         )

@@ -75,6 +75,12 @@ class RequestRecord:
         return self.finish_t - self.arrival_t
 
     @property
+    def ttft_s(self) -> float:
+        """Time to first token: arrival to end of the admitting prefill
+        (the prefill's greedy token is the request's first output)."""
+        return self.admit_t - self.arrival_t
+
+    @property
     def n_new(self) -> int:
         return int(self.tokens.size)
 

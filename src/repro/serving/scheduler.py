@@ -14,14 +14,23 @@ policies cover the serving spectrum the benchmarks compare:
   admitted only when EVERY slot is free, so the whole wave pads to its
   slowest request. This is the ``serve_static_batch`` baseline; the gap to
   continuous batching is exactly the tail-of-wave idling.
+* :class:`BucketedScheduler` -- continuous admission, but arrived requests
+  are *length-sorted* via the optional ``order`` hook, so the paged
+  engine's bucketed prefill sees same-bucket requests adjacently and can
+  batch them into one padded prefill call instead of one per request.
+
+A scheduler may define ``order(arrived) -> permutation`` to choose WHICH
+arrived requests enter the free slots (the engine admits the first
+``admit(...)`` entries of the permutation); without it admission is FIFO.
 
 Invariants (pinned by tests/test_serving_engine.py):
 * a slot never serves two live requests -- admissions are bounded by the
   free-slot count, and the engine assigns each admission a distinct free
   slot;
 * retired slots are reset before re-admission (engine-side, see
-  ``models.lm.reset_cache_slot``);
-* admission order is FIFO over arrived requests.
+  ``models.lm.reset_cache_slot`` / ``free_cache_slot_paged``);
+* admission order is FIFO over arrived requests (schedulers with an
+  ``order`` hook deliberately relax this to their stated order).
 """
 
 from __future__ import annotations
@@ -49,3 +58,25 @@ class StaticBatchScheduler:
         if n_active:
             return 0  # the wave must drain completely first
         return min(n_arrived, n_free)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketedScheduler:
+    """Continuous admission in prompt-length-sorted order.
+
+    Same admission *count* as :class:`ContinuousScheduler`; the ``order``
+    hook sorts arrived requests by prompt length (stable, so equal-length
+    requests stay FIFO). Under the paged engine's bucketed prefill this
+    makes same-bucket requests adjacent, so they share one padded prefill
+    call -- fewer, fuller prefill batches under mixed-length traffic.
+    """
+
+    name: str = "bucketed"
+
+    def admit(self, n_arrived: int, n_free: int, n_active: int) -> int:
+        return min(n_arrived, n_free)
+
+    def order(self, arrived) -> list[int]:
+        return sorted(
+            range(len(arrived)), key=lambda i: int(arrived[i].prompt.size)
+        )

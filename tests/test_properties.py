@@ -14,12 +14,17 @@ fallback grid on minimal images):
     det_sum's fixed-point limb reduction makes it bit-invariant under any
     row/col permutation (hence any sharding/reduction order);
   * DAC/ADC fake-quantization is idempotent -- re-quantizing a quantized
-    activation is a bit-exact no-op, so chained quantizers cannot compound.
+    activation is a bit-exact no-op, so chained quantizers cannot compound;
+  * the serving page allocator conserves its free list under alloc/free
+    storms (no double allocation, scratch page 0 never handed out, every
+    free returns exactly what was taken), and the prefill bucket grid
+    covers every admissible prompt length with the smallest bucket.
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 try:
     import hypothesis
@@ -30,6 +35,7 @@ except ImportError:  # minimal CI images: run a fixed example grid instead
     from _hypothesis_fallback import strategies as st
 
 from repro.core import pcm, quant
+from repro.serving import PageAllocator, bucket_for, default_buckets
 
 hypothesis.settings.register_profile(
     "ci", max_examples=25, deadline=None, derandomize=True
@@ -196,3 +202,69 @@ def test_dac_quantization_idempotent(bits, r_adc, gain_s, w_max, seed):
     x1 = quant.dac_quantize(x, *args)
     x2 = quant.dac_quantize(x1, *args)
     np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+
+
+# ------------------------------------------- serving page-pool free list
+
+
+@given(n_pages=st.integers(2, 64), seed=st.integers(0, 2**31 - 1))
+def test_page_allocator_conserves_free_list_under_storm(n_pages, seed):
+    """Random alloc/free storm: the free list is conserved at every step
+    (n_free + n_in_use == n_pages - 1), no page is handed out twice while
+    held, and the scratch page 0 is never handed out."""
+    rng = np.random.RandomState(seed)
+    alloc = PageAllocator(n_pages)
+    held: list[list[int]] = []
+    outstanding: set[int] = set()
+    for _ in range(40):
+        assert alloc.n_free + alloc.n_in_use == n_pages - 1
+        assert alloc.n_in_use == len(outstanding)
+        if rng.rand() < 0.6 and alloc.n_free:
+            n = int(rng.randint(1, alloc.n_free + 1))
+            pages = alloc.alloc(n)
+            assert len(pages) == len(set(pages)) == n
+            assert 0 not in pages
+            assert all(0 < p < n_pages for p in pages)
+            assert not set(pages) & outstanding  # no double allocation
+            outstanding |= set(pages)
+            held.append(pages)
+        elif held:
+            pages = held.pop(int(rng.randint(len(held))))
+            alloc.free(pages)
+            outstanding -= set(pages)
+    assert alloc.peak_in_use <= n_pages - 1
+    for pages in held:  # drain: every page frees exactly once
+        alloc.free(pages)
+    assert alloc.n_in_use == 0 and alloc.n_free == n_pages - 1
+
+
+@given(n_pages=st.integers(2, 32))
+def test_page_allocator_rejects_overallocation_and_double_free(n_pages):
+    alloc = PageAllocator(n_pages)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        alloc.alloc(n_pages)  # only n_pages - 1 usable (0 is scratch)
+    pages = alloc.alloc(n_pages - 1)
+    assert alloc.n_free == 0
+    alloc.free(pages)
+    with pytest.raises(ValueError, match="not allocated"):
+        alloc.free([pages[0]])  # double free
+    with pytest.raises(ValueError, match="not allocated"):
+        alloc.free([0])  # the scratch page is never allocatable
+    with pytest.raises(ValueError, match="not allocated"):
+        alloc.free([n_pages])  # out of range
+    assert alloc.n_free == n_pages - 1
+
+
+@given(s_max=st.integers(1, 4096), length=st.integers(1, 8192))
+def test_prefill_bucket_grid_covers_every_admissible_length(s_max, length):
+    buckets = default_buckets(s_max)
+    assert buckets[-1] == s_max  # every admissible prompt has a bucket
+    assert all(a < b for a, b in zip(buckets, buckets[1:]))
+    if length <= s_max:
+        b = bucket_for(length, buckets)
+        assert b >= length
+        # smallest such bucket: everything below b is too small
+        assert all(x < length for x in buckets if x < b)
+    else:
+        with pytest.raises(ValueError, match="exceeds"):
+            bucket_for(length, buckets)

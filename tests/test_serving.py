@@ -152,6 +152,28 @@ BAD_ARGV = {
     "bad_b_adc_overrides_spec": [
         "--analog", "--b-adc-overrides", "lm_head=four"
     ],
+    "kv_page_size_without_trace": ["--analog", "--kv-page-size", "16"],
+    "kv_page_size_zero": [
+        "--analog", "--request-trace", "3", "--kv-page-size", "0"
+    ],
+    "kv_page_size_with_recurrent_family": [
+        "--analog", "--arch", "mamba2-2.7b", "--request-trace", "3",
+        "--kv-page-size", "16",
+    ],
+    "kv_pages_without_page_size": [
+        "--analog", "--request-trace", "3", "--kv-pages", "8"
+    ],
+    "prefill_buckets_without_page_size": [
+        "--analog", "--request-trace", "3", "--prefill-buckets", "32,64"
+    ],
+    "bad_prefill_buckets_spec": [
+        "--analog", "--request-trace", "3", "--kv-page-size", "16",
+        "--prefill-buckets", "bogus",
+    ],
+    "nonpositive_prefill_buckets": [
+        "--analog", "--request-trace", "3", "--kv-page-size", "16",
+        "--prefill-buckets", "0,32",
+    ],
 }
 
 
@@ -182,3 +204,22 @@ def test_serve_cli_request_trace_smoke(monkeypatch, capsys):
     assert "serving: mode=continuous requests=3" in out
     assert "program_events_delta=0" in out
     assert "accuracy_vs_digital_ref:" in out
+
+
+def test_serve_cli_paged_request_trace_smoke(monkeypatch, capsys):
+    """Paged serving end-to-end through the CLI: --kv-page-size switches
+    the engine to the paged cache + bucketed admission; the serving
+    contract (zero programming events) and the trace bound still hold."""
+    from repro.launch import serve
+
+    monkeypatch.setattr(
+        "sys.argv",
+        ["serve", "--analog", "--batch", "2", "--prompt-len", "8",
+         "--tokens", "4", "--request-trace", "3", "--arrival-rate", "200",
+         "--kv-page-size", "8", "--prefill-buckets", "16,32"],
+    )
+    serve.main()
+    out = capsys.readouterr().out
+    assert "serving: mode=bucketed requests=3" in out
+    assert "program_events_delta=0" in out
+    assert "prefill_traces=" in out

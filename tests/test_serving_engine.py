@@ -19,8 +19,16 @@ from repro.core import engine as engine_mod
 from repro.core.analog import AnalogConfig
 from repro.core.engine import DriftSchedule
 from repro.models import ModelConfig, init_lm_cache, lm_forward, lm_init
-from repro.models.lm import reset_cache_slot, unstack_cache, write_cache_slot
+from repro.models import attention as attn_lib
+from repro.models.lm import (
+    free_cache_slot_paged,
+    reset_cache_slot,
+    unstack_cache,
+    write_cache_slot,
+    write_cache_slot_paged,
+)
 from repro.serving import (
+    BucketedScheduler,
     ContinuousScheduler,
     DriftPolicy,
     Request,
@@ -28,6 +36,7 @@ from repro.serving import (
     StaticBatchScheduler,
     poisson_trace,
 )
+from repro.serving.engine import _kv_cache_bytes
 
 DIGITAL = AnalogConfig()
 S_MAX = 48
@@ -349,6 +358,268 @@ def test_poisson_arrivals_gate_admission(dense_cfg, dense_params):
     recs = {r.rid: r for r in rep.records}
     assert recs[0].admit_t < 0.5 <= recs[1].admit_t
     assert recs[1].admit_step >= recs[0].finish_step
+
+
+# ----------------------------------------------------------- paged KV cache
+
+
+def test_paged_bit_identical_to_rect_across_page_sizes(dense_cfg, program):
+    """The tentpole invariant: paged serving (bucketed padded prefill,
+    page-table gather decode, lazy page growth) is bit-identical to the
+    rectangular slot cache on the same frozen chip draw -- including page
+    sizes that do NOT divide the prompt lengths (ps=5 vs prompts 9/23)."""
+    trace = poisson_trace(
+        jax.random.PRNGKey(1), 7, vocab=dense_cfg.vocab,
+        prompt_lens=(4, 9, 16, 23, 33), new_tokens=(3, 10),
+    )
+    rect = ServingEngine.for_program(
+        program, dense_cfg, n_slots=3, s_max=S_MAX
+    )
+    rep_r = rect.run(list(trace))
+    for ps in (4, 5, 16):
+        paged = ServingEngine.for_program(
+            program, dense_cfg, n_slots=3, s_max=S_MAX,
+            paged=True, page_size=ps, prefill_batch=2,
+        )
+        rep_p = paged.run(list(trace), scheduler=BucketedScheduler())
+        for r in trace:
+            assert np.array_equal(
+                rep_p.tokens_of(r.rid), rep_r.tokens_of(r.rid)
+            ), (ps, r.rid)
+        assert rep_p.n_prefill_traces <= len(paged.prefill_buckets)
+        assert rep_p.peak_pages_in_use > 0
+        assert rep_p.program_events_delta == 0
+
+
+def test_paged_long_prompts_flat_memory(dense_cfg, program):
+    """Virtual capacity: prompts the rectangle could not afford, served at
+    a page pool SMALLER than the rectangular cache -- and still bitwise
+    equal to one-at-a-time rectangular serving."""
+    s_virt = 384
+    n_pages = 26  # 25 usable pages * 16 = 400 rows vs 2*384 = 768 rect rows
+    long_reqs = poisson_trace(
+        jax.random.PRNGKey(2), 4, vocab=dense_cfg.vocab,
+        prompt_lens=(16, 150, 300), new_tokens=(3, 6),
+    )
+    paged = ServingEngine.for_program(
+        program, dense_cfg, n_slots=2, s_max=s_virt,
+        paged=True, page_size=16, n_pages=n_pages, prefill_batch=2,
+    )
+    rep = paged.run(list(long_reqs), scheduler=BucketedScheduler())
+    solo = ServingEngine.for_program(
+        program, dense_cfg, n_slots=1, s_max=s_virt
+    )
+    rep_s = solo.run(list(long_reqs))
+    for r in long_reqs:
+        assert np.array_equal(rep.tokens_of(r.rid), rep_s.tokens_of(r.rid))
+    rect_bytes = _kv_cache_bytes(
+        init_lm_cache(
+            dense_cfg, 2, s_virt, dense_cfg.dtype,
+            stacked=False, per_slot=True,
+        )
+    )
+    assert rep.peak_kv_bytes < rect_bytes
+    assert 0 < rep.peak_pages_in_use <= n_pages - 1
+
+
+def test_paged_drift_lifecycle_composition(dense_cfg, dense_params):
+    """Paged serving composes with the drift lifecycle: the same
+    DriftPolicy ages the chip at the same decode steps, and the paged
+    generations stay bit-identical to the rectangular engine's."""
+    program = engine_mod.compile_program(
+        dense_params, AnalogConfig().infer(b_adc=8, t_seconds=25.0),
+        jax.random.PRNGKey(5),
+    )
+    policy = DriftPolicy(
+        DriftSchedule((25.0, 3600.0, 86400.0)), every_steps=2
+    )
+    trace = _trace(dense_cfg, n=4, new_tokens=(6, 10))
+    rect = ServingEngine.for_program(
+        program, dense_cfg, n_slots=2, s_max=S_MAX
+    )
+    rep_r = rect.run(trace, drift_policy=policy)
+    # prefill_batch=1 + FIFO admission: decode steps align with the
+    # rectangular engine's, so the age ticks land at the same steps
+    paged = ServingEngine.for_program(
+        program, dense_cfg, n_slots=2, s_max=S_MAX,
+        paged=True, page_size=8, prefill_batch=1,
+    )
+    rep_p = paged.run(trace, drift_policy=policy)
+    for r in trace:
+        assert np.array_equal(rep_p.tokens_of(r.rid), rep_r.tokens_of(r.rid))
+    assert rep_p.program_events_delta == 0
+    assert (
+        [e["step"] for e in rep_p.age_events]
+        == [e["step"] for e in rep_r.age_events]
+    )
+    assert paged.program.t_seconds == 86400.0
+
+
+def test_paged_prefill_traces_bounded_by_buckets(dense_cfg, dense_params):
+    """Satellite: many distinct prompt lengths compile one prefill trace
+    per BUCKET in paged mode, but one per LENGTH in exact-length mode."""
+    lens = tuple(range(5, 17))  # 12 distinct lengths
+    reqs = [
+        Request(rid=i, prompt=(np.arange(n) % dense_cfg.vocab).astype(np.int32),
+                max_new_tokens=2)
+        for i, n in enumerate(lens)
+    ]
+    paged = ServingEngine(
+        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX,
+        paged=True, page_size=8,
+    )
+    rep_p = paged.run(list(reqs), scheduler=BucketedScheduler())
+    assert rep_p.n_prefill_traces <= len(paged.prefill_buckets)
+    rect = ServingEngine(
+        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX
+    )
+    rep_r = rect.run(list(reqs))
+    assert rep_r.n_prefill_traces == len(lens)
+    for r in reqs:
+        assert np.array_equal(rep_p.tokens_of(r.rid), rep_r.tokens_of(r.rid))
+
+
+def test_serve_report_empty_run(dense_cfg, dense_params):
+    """Edge case: an empty trace is a valid run -- zero everything, no
+    division blowups, summary still renders."""
+    served = ServingEngine(
+        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX
+    )
+    rep = served.run([])
+    assert rep.n_requests == 0 and rep.n_generated == 0 and rep.n_steps == 0
+    assert rep.occupancy == 0.0
+    assert rep.latency_s(95) == 0.0 and rep.ttft_s(95) == 0.0
+    assert rep.tokens_per_s == 0.0 and rep.requests_per_s == 0.0
+    assert rep.program_events_delta == 0
+    assert "requests=0" in rep.summary()
+    with pytest.raises(KeyError):
+        rep.tokens_of(0)
+
+
+def test_serve_report_single_request_no_decode_steps(dense_cfg, dense_params):
+    """Edge case: max_new_tokens=1 retires at prefill -- the run has zero
+    decode steps yet one generated token, and the metrics stay sane."""
+    served = ServingEngine(
+        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX
+    )
+    rep = served.run(
+        [Request(rid=7, prompt=np.arange(6), max_new_tokens=1)]
+    )
+    assert rep.n_requests == 1 and rep.n_generated == 1
+    assert rep.n_steps == 0 and rep.slot_steps == 0
+    assert rep.occupancy == 0.0
+    assert rep.tokens_of(7).size == 1
+    rec = rep.records[0]
+    assert rec.finished_by == "max_tokens"
+    assert 0.0 <= rec.ttft_s <= rec.latency_s
+    assert rep.ttft_s(95) == rec.ttft_s
+    assert "requests=1" in rep.summary()
+
+
+def test_paged_engine_validation(dense_cfg, dense_params):
+    mk = lambda **kw: ServingEngine(
+        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=16,
+        paged=True, **kw
+    )
+    with pytest.raises(ValueError, match="page_size"):
+        mk(page_size=0)
+    with pytest.raises(ValueError, match="prefill_batch"):
+        mk(prefill_batch=0)
+    # recurrent families carry position-free state that right-padded
+    # bucketed prefill would corrupt -- rejected at construction
+    for kw in (
+        dict(family="ssm", ssm_state=16),
+        dict(family="hybrid", block_pattern=("rec", "rec", "attn")),
+    ):
+        cfg = _cfg(**kw)
+        with pytest.raises(ValueError, match="position-free"):
+            ServingEngine(
+                cfg, DIGITAL, lm_init(jax.random.PRNGKey(0), cfg),
+                n_slots=1, s_max=16, paged=True,
+            )
+    audio_cfg = dataclasses.replace(dense_cfg, frontend="audio_frames")
+    with pytest.raises(NotImplementedError, match="feature-fed"):
+        ServingEngine(
+            audio_cfg, DIGITAL, dense_params, n_slots=1, s_max=16,
+            paged=True,
+        )
+
+
+def test_paged_run_rejects_infeasible_and_feature_requests(
+    dense_cfg, dense_params
+):
+    tight = ServingEngine(
+        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=48,
+        paged=True, page_size=8, n_pages=3,  # 2 usable pages = 16 rows
+    )
+    with pytest.raises(ValueError, match="never be admitted"):
+        tight.run(
+            [Request(rid=0, prompt=np.arange(20), max_new_tokens=10)]
+        )
+    roomy = ServingEngine(
+        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=48,
+        paged=True, page_size=8,
+    )
+    with pytest.raises(NotImplementedError, match="paged mode"):
+        roomy.run(
+            [Request(rid=0, prompt=np.arange(4), max_new_tokens=2,
+                     features={"audio_frames": np.zeros((1, 2, 4))})]
+        )
+
+
+def test_paged_free_leaves_other_slots_pages_untouched(
+    dense_cfg, dense_params
+):
+    """Satellite: freeing one slot's pages zeroes exactly those pool rows;
+    every page owned by another slot stays bitwise untouched."""
+    ps = 4
+    paged = init_lm_cache(
+        dense_cfg, 2, 16, jnp.float32, stacked=False,
+        paged=True, page_size=ps, n_pages=8,
+    )
+
+    def prefill_src(shift):
+        single = init_lm_cache(dense_cfg, 1, 8, jnp.float32)
+        toks = ((jnp.arange(8) + shift) % dense_cfg.vocab).astype(jnp.int32)
+        _, c = lm_forward(
+            dense_params, {"tokens": toks[None]}, DIGITAL, dense_cfg,
+            cache=single, last_token_only=True,
+        )
+        return unstack_cache(c)
+
+    paged = write_cache_slot_paged(
+        paged, prefill_src(0), 0, 0, np.array([1, 2], np.int32), 8
+    )
+    paged = write_cache_slot_paged(
+        paged, prefill_src(3), 1, 0, np.array([3, 4], np.int32), 8
+    )
+
+    def paged_leaves(tree):
+        return [
+            leaf
+            for leaf in jax.tree.leaves(
+                tree, is_leaf=lambda x: isinstance(x, attn_lib.PagedKVCache)
+            )
+            if isinstance(leaf, attn_lib.PagedKVCache)
+        ]
+
+    before = [
+        (np.asarray(c.k), np.asarray(c.v), np.asarray(c.table),
+         np.asarray(c.length))
+        for c in paged_leaves(paged)
+    ]
+    pvec = np.zeros((4,), np.int32)
+    pvec[:2] = (1, 2)
+    freed = free_cache_slot_paged(paged, 0, pvec)
+    for (k0, v0, tab0, len0), c in zip(before, paged_leaves(freed)):
+        assert not np.any(np.asarray(c.k)[1:3])  # slot 0's pages zeroed
+        assert not np.any(np.asarray(c.v)[1:3])
+        np.testing.assert_array_equal(np.asarray(c.k)[3:5], k0[3:5])
+        np.testing.assert_array_equal(np.asarray(c.v)[3:5], v0[3:5])
+        np.testing.assert_array_equal(np.asarray(c.table)[1], tab0[1])
+        assert int(np.asarray(c.length)[1]) == int(len0[1]) == 8
+        assert not np.any(np.asarray(c.table)[0])
+        assert int(np.asarray(c.length)[0]) == 0
 
 
 # ---------------------------------------------------------- drift lifecycle
