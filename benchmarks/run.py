@@ -47,6 +47,7 @@ def main() -> None:
         fig7_drift,
         fig8_layerwise,
         fig9_micronet,
+        fleet_bench,
         kernels_bench,
         pipeline_bench,
         serving_bench,
@@ -61,6 +62,7 @@ def main() -> None:
         ("fig8_layerwise", fig8_layerwise.run),
         ("pipeline", pipeline_bench.run),
         ("serving", serving_bench.run),
+        ("fleet", fleet_bench.run),
         ("kernels", kernels_bench.run),
         ("table1_ablation", table1_ablation.run),
         ("fig7_drift", fig7_drift.run),

@@ -46,6 +46,7 @@ from repro.serving import (
     BucketedScheduler,
     ContinuousScheduler,
     Request,
+    ServingConfig,
     ServingEngine,
     StaticBatchScheduler,
     poisson_trace,
@@ -81,8 +82,8 @@ def run(fast: bool = False) -> list[str]:
         jax.random.PRNGKey(42),
     )
     served = ServingEngine.for_program(
-        program, cfg, n_slots=n_slots,
-        s_max=max(PROMPT_BUCKETS) + LONG_TOKENS,
+        program, cfg,
+        ServingConfig(n_slots=n_slots, s_max=max(PROMPT_BUCKETS) + LONG_TOKENS),
     )
     # Mixed interactive/long workload: one long generation per wave of
     # n_slots, the rest short. Static batching pads every wave to its long
@@ -152,9 +153,12 @@ def run(fast: bool = False) -> list[str]:
 
     def paged_engine(prefill_batch):
         return ServingEngine.for_program(
-            program, cfg, n_slots=np_slots, s_max=s_virt,
-            paged=True, page_size=PAGE_SIZE, n_pages=n_pages,
-            prefill_batch=prefill_batch,
+            program, cfg,
+            ServingConfig(
+                n_slots=np_slots, s_max=s_virt,
+                paged=True, page_size=PAGE_SIZE, n_pages=n_pages,
+                prefill_batch=prefill_batch,
+            ),
         )
 
     events0 = engine.program_event_count()

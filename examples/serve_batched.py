@@ -21,7 +21,14 @@ from repro import configs
 from repro.core import engine
 from repro.core.analog import AnalogConfig
 from repro.models import lm
-from repro.serving import ServingEngine, StaticBatchScheduler, poisson_trace
+from repro.serving import (
+    FleetConfig,
+    FleetRouter,
+    ServingConfig,
+    ServingEngine,
+    StaticBatchScheduler,
+    poisson_trace,
+)
 
 
 def main() -> None:
@@ -32,6 +39,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="also serve the trace across N independent chip "
+                         "draws behind serving.FleetRouter")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -44,10 +54,10 @@ def main() -> None:
     )
     s_max = args.prompt_len + args.new_tokens
 
+    serving_cfg = ServingConfig(n_slots=args.slots, s_max=s_max)
+
     params = lm.lm_init(jax.random.PRNGKey(0), cfg)
-    digital = ServingEngine(
-        cfg, AnalogConfig(), params, n_slots=args.slots, s_max=s_max,
-    )
+    digital = ServingEngine(cfg, AnalogConfig(), params, serving_cfg)
     rep_d = digital.run(trace)
 
     # Program-once deployment: the PCM chain runs a single time here; every
@@ -55,9 +65,7 @@ def main() -> None:
     program = engine.compile_program(
         params, AnalogConfig().infer(b_adc=8, t_seconds=86400.0), key
     )
-    analog = ServingEngine.for_program(
-        program, cfg, n_slots=args.slots, s_max=s_max,
-    )
+    analog = ServingEngine.for_program(program, cfg, serving_cfg)
     rep_a = analog.run(trace)
     rep_s = analog.run(trace, scheduler=StaticBatchScheduler())
 
@@ -78,6 +86,16 @@ def main() -> None:
     r0 = trace[0].rid
     print("digital sample:", rep_d.tokens_of(r0)[:10].tolist())
     print("analog  sample:", rep_a.tokens_of(r0)[:10].tolist())
+
+    if args.fleet > 0:
+        # The production shape: N independent chip draws behind one
+        # router (each its own write-noise draw and drift clock).
+        router = FleetRouter.build(
+            params, AnalogConfig().infer(b_adc=8, t_seconds=86400.0),
+            cfg, serving_cfg, FleetConfig(n_chips=args.fleet), key=key,
+        )
+        rep_f = router.run(trace)
+        print(f"fleet    {rep_f.summary()}")
 
 
 if __name__ == "__main__":

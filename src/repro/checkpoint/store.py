@@ -211,6 +211,9 @@ def save_program(path: str, program, *, extra_meta: Optional[dict] = None) -> st
         # was evaluated at; older loaders ignore it, older artifacts load
         # with the single stored t_seconds as their history
         "age_history": [float(t) for t in program.age_history],
+        # fleet identity (optional, v1-compatible like age_history): which
+        # physical chip of a fleet this draw is; older loaders ignore it
+        "chip_id": program.chip_id,
         "cfg": dataclasses.asdict(program.cfg),
         # per-layer quant plans: geometry + the ADC bitwidth the layer was
         # compiled at (mixed-precision programs record a bitwidth per path)
@@ -422,6 +425,10 @@ def load_program(path: str, params_like: Any = None, *, shardings: Any = None):
         age_history=tuple(
             float(t)
             for t in meta.get("age_history", [meta["t_seconds"]])
+        ),
+        # pre-fleet artifacts carry no chip identity
+        chip_id=(
+            int(meta["chip_id"]) if meta.get("chip_id") is not None else None
         ),
     )
 

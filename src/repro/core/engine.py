@@ -861,6 +861,12 @@ class CiMProgram:
     #: so a reloaded chip knows how it was aged. ``drift_to`` itself is a
     #: stateless primitive and does not record.
     age_history: tuple[float, ...] = ()
+    #: fleet identity: which physical chip this program is (None for a
+    #: solo chip). A fleet compiles N draws with ``chip_id=0..N-1`` so
+    #: routing, refresh events, and the artifact can name the chip; the
+    #: id rides through :func:`age_program`/``drift_to`` (dataclasses.
+    #: replace) and the v1 artifact (optional meta, like ``age_history``).
+    chip_id: Optional[int] = None
 
     @property
     def n_layers(self) -> int:
@@ -958,6 +964,7 @@ def compile_program(
     with_mapping: bool = False,
     shardings: Any = None,
     b_adc_overrides: Optional[BitOverrides] = None,
+    chip_id: Optional[int] = None,
 ) -> CiMProgram:
     """Program phase: walk ``params`` once and build a :class:`CiMProgram`.
 
@@ -992,6 +999,10 @@ def compile_program(
     ``bits + 1``) and carry a shape-encoded ``b_adc_buf`` so the execute
     phase recovers the bitwidth statically under jit; bits must be in
     {4, 6, 8}. Unmatched layers use ``cfg.b_adc``.
+
+    ``chip_id``: optional fleet identity tag carried on the program (and
+    into the v1 artifact) -- a fleet compiles N independent draws of the
+    same weights under distinct keys with ``chip_id=0..N-1``.
     """
     t = float(cfg.t_seconds if t_seconds is None else t_seconds)
     transforms = transforms or {}
@@ -1118,4 +1129,5 @@ def compile_program(
         plans=plans,
         mapping=mapping,
         age_history=(t,),
+        chip_id=chip_id,
     )

@@ -54,6 +54,15 @@ its full ``age_history``, so a reloaded artifact serves bit-exactly at the
 last age. Combined with ``--request-trace``, the schedule becomes a
 ``serving.DriftPolicy``: the chip ages (and refreshes) BETWEEN decode
 steps of one continuous run -- the paper's always-on deployment.
+
+Fleet serving: ``--fleet N`` spreads the ``--request-trace`` across N
+independently-programmed chips behind a ``serving.FleetRouter`` (each chip
+its own write-noise draw under a distinct key; with ``--load-program`` the
+fleet is N replicas of the saved draw instead). ``--agreement-slo X`` arms
+SLO-aware dispatch: arrived requests go to the least-loaded chip whose
+recent top-1 agreement clears X, and the report records the worst
+aggregate-agreement window. ``--fleet 1`` is byte-identical to not passing
+``--fleet`` at all (it routes through the single-engine path).
 """
 
 from __future__ import annotations
@@ -78,7 +87,10 @@ from repro.models import lm
 from repro.serving import (
     BucketedScheduler,
     DriftPolicy,
+    FleetConfig,
+    FleetRouter,
     Request,
+    ServingConfig,
     ServingEngine,
     poisson_trace,
 )
@@ -111,75 +123,102 @@ def trace_prompt_buckets(prompt_len: int) -> tuple[int, ...]:
 
 
 def build_parser() -> argparse.ArgumentParser:
+    """Serving CLI, grouped by subsystem (the groups mirror the config
+    surfaces: serving -> ServingConfig, paging -> its paged fields,
+    fleet -> FleetConfig; drift/analog stay launcher-level)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b",
                     choices=sorted(configs.LM_ARCHS))
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--request-trace", type=int, default=None, metavar="N",
-                    help="continuous batching: serve N variable-length "
-                         "requests (prompts bucketed up to --prompt-len, "
-                         "budgets up to --tokens) through the request-level "
-                         "scheduler over --batch decode slots")
-    ap.add_argument("--arrival-rate", type=float, default=None, metavar="R",
-                    help="Poisson arrivals at R requests/s for "
-                         "--request-trace (default: all queued at t=0)")
-    ap.add_argument("--kv-page-size", type=int, default=None, metavar="P",
-                    help="paged KV cache: serve --request-trace over a "
-                         "shared pool of P-token pages per layer instead "
-                         "of per-slot s_max rectangles; prompts prefill "
-                         "right-padded to a bucket grid (one jit trace per "
-                         "bucket) and admission is length-sorted")
-    ap.add_argument("--kv-pages", type=int, default=None, metavar="N",
-                    help="page-pool size for --kv-page-size (default: the "
-                         "rectangle-equivalent slots*ceil(s_max/P)+1; pass "
-                         "less to serve long prompts at flat memory)")
-    ap.add_argument("--prefill-buckets", default=None, metavar="SPEC",
-                    help="comma list of prefill pad lengths for "
-                         "--kv-page-size (default: geometric 32*2^k grid "
-                         "up to s_max)")
-    ap.add_argument("--analog", action="store_true",
-                    help="serve through the PCM deployment (program-once)")
-    ap.add_argument("--per-call", action="store_true",
-                    help="legacy: re-simulate PCM programming every forward")
-    ap.add_argument("--t-hours", type=float, default=24.0,
-                    help="PCM drift time for --analog")
-    ap.add_argument("--drift-schedule", default=None, metavar="SPEC",
-                    help="drift-lifecycle serving: age ONE programmed chip "
-                         "across these ages (comma list of seconds, or "
-                         "'fig7' for the paper's 25s/1h/1d/1mo/1y grid) and "
-                         "re-emit the accuracy counters at each age; "
-                         "overrides --t-hours")
-    ap.add_argument("--refresh-below", type=float, default=None, metavar="X",
-                    help="refresh policy: reprogram the chip from the "
-                         "stored source weights (fresh write noise, age "
-                         "resets to t_c) when top-1 agreement at an age of "
-                         "the --drift-schedule drops below X; logs a "
-                         "'reprogram' event")
-    ap.add_argument("--b-adc", type=int, default=None,
-                    choices=list(SUPPORTED_B_ADC),
-                    help="ADC bitwidth for analog serving (default 8); with "
-                         "--load-program it must match the artifact")
-    ap.add_argument("--b-adc-overrides", default=None, metavar="SPEC",
-                    help="mixed-precision: comma list of pattern=bits over "
-                         "layer paths, e.g. 'lm_head=8,blocks/*=4'")
-    ap.add_argument("--resample-read-noise", action="store_true",
-                    help="resample PCM 1/f read noise per MVM from stored "
-                         "pre-read conductances (default: frozen draw, "
-                         "bit-exact executes)")
-    ap.add_argument("--use-kernel", action="store_true",
-                    help="execute through the fused Pallas MVM kernel "
-                         "(interpret mode off-TPU); bit-identical to the "
-                         "jnp oracle for single-row-tile layers")
-    ap.add_argument("--no-ref-check", action="store_true",
-                    help="skip the digital-reference accuracy counters")
-    ap.add_argument("--mesh-model", type=int, default=0,
-                    help="shard programming+serving with this TP degree")
-    ap.add_argument("--save-program", default=None, metavar="DIR",
-                    help="persist the programmed chip artifact")
-    ap.add_argument("--load-program", default=None, metavar="DIR",
-                    help="serve a saved chip draw (implies --analog)")
+
+    g = ap.add_argument_group(
+        "serving", "workload shape and the request-level engine")
+    g.add_argument("--batch", type=int, default=4)
+    g.add_argument("--prompt-len", type=int, default=32)
+    g.add_argument("--tokens", type=int, default=32)
+    g.add_argument("--request-trace", type=int, default=None, metavar="N",
+                   help="continuous batching: serve N variable-length "
+                        "requests (prompts bucketed up to --prompt-len, "
+                        "budgets up to --tokens) through the request-level "
+                        "scheduler over --batch decode slots")
+    g.add_argument("--arrival-rate", type=float, default=None, metavar="R",
+                   help="Poisson arrivals at R requests/s for "
+                        "--request-trace (default: all queued at t=0)")
+    g.add_argument("--no-ref-check", action="store_true",
+                   help="skip the digital-reference accuracy counters")
+
+    g = ap.add_argument_group(
+        "paging", "paged KV cache + bucketed prefill (over --request-trace)")
+    g.add_argument("--kv-page-size", type=int, default=None, metavar="P",
+                   help="paged KV cache: serve --request-trace over a "
+                        "shared pool of P-token pages per layer instead "
+                        "of per-slot s_max rectangles; prompts prefill "
+                        "right-padded to a bucket grid (one jit trace per "
+                        "bucket) and admission is length-sorted")
+    g.add_argument("--kv-pages", type=int, default=None, metavar="N",
+                   help="page-pool size for --kv-page-size (default: the "
+                        "rectangle-equivalent slots*ceil(s_max/P)+1; pass "
+                        "less to serve long prompts at flat memory)")
+    g.add_argument("--prefill-buckets", default=None, metavar="SPEC",
+                   help="comma list of prefill pad lengths for "
+                        "--kv-page-size (default: geometric 32*2^k grid "
+                        "up to s_max)")
+
+    g = ap.add_argument_group(
+        "analog program", "program-once PCM deployment and its artifact")
+    g.add_argument("--analog", action="store_true",
+                   help="serve through the PCM deployment (program-once)")
+    g.add_argument("--per-call", action="store_true",
+                   help="legacy: re-simulate PCM programming every forward")
+    g.add_argument("--t-hours", type=float, default=24.0,
+                   help="PCM drift time for --analog")
+    g.add_argument("--b-adc", type=int, default=None,
+                   choices=list(SUPPORTED_B_ADC),
+                   help="ADC bitwidth for analog serving (default 8); with "
+                        "--load-program it must match the artifact")
+    g.add_argument("--b-adc-overrides", default=None, metavar="SPEC",
+                   help="mixed-precision: comma list of pattern=bits over "
+                        "layer paths, e.g. 'lm_head=8,blocks/*=4'")
+    g.add_argument("--resample-read-noise", action="store_true",
+                   help="resample PCM 1/f read noise per MVM from stored "
+                        "pre-read conductances (default: frozen draw, "
+                        "bit-exact executes)")
+    g.add_argument("--use-kernel", action="store_true",
+                   help="execute through the fused Pallas MVM kernel "
+                        "(interpret mode off-TPU); bit-identical to the "
+                        "jnp oracle for single-row-tile layers")
+    g.add_argument("--mesh-model", type=int, default=0,
+                   help="shard programming+serving with this TP degree")
+    g.add_argument("--save-program", default=None, metavar="DIR",
+                   help="persist the programmed chip artifact")
+    g.add_argument("--load-program", default=None, metavar="DIR",
+                   help="serve a saved chip draw (implies --analog)")
+
+    g = ap.add_argument_group(
+        "drift", "drift-lifecycle serving over one chip")
+    g.add_argument("--drift-schedule", default=None, metavar="SPEC",
+                   help="drift-lifecycle serving: age ONE programmed chip "
+                        "across these ages (comma list of seconds, or "
+                        "'fig7' for the paper's 25s/1h/1d/1mo/1y grid) and "
+                        "re-emit the accuracy counters at each age; "
+                        "overrides --t-hours")
+    g.add_argument("--refresh-below", type=float, default=None, metavar="X",
+                   help="refresh policy: reprogram the chip from the "
+                        "stored source weights (fresh write noise, age "
+                        "resets to t_c) when top-1 agreement at an age of "
+                        "the --drift-schedule drops below X; logs a "
+                        "'reprogram' event")
+
+    g = ap.add_argument_group(
+        "fleet", "N programmed chips behind one router")
+    g.add_argument("--fleet", type=int, default=None, metavar="N",
+                   help="serve the --request-trace across N independent "
+                        "chip draws (or N replicas of a --load-program "
+                        "artifact) behind serving.FleetRouter; --fleet 1 "
+                        "is byte-identical to the single-engine path")
+    g.add_argument("--agreement-slo", type=float, default=None, metavar="X",
+                   help="fleet SLO: dispatch to the least-loaded chip "
+                        "whose recent top-1 agreement clears X, and record "
+                        "the worst aggregate-agreement window")
     return ap
 
 
@@ -253,6 +292,35 @@ def validate_args(ap: argparse.ArgumentParser, args) -> None:
                      "(want a comma list of integers)")
         if not buckets or min(buckets) < 1:
             ap.error("--prefill-buckets needs positive lengths")
+    if args.fleet is not None and args.fleet < 1:
+        ap.error("--fleet needs at least one chip")
+    if args.fleet is not None and args.request_trace is None:
+        ap.error("--fleet spreads a request trace across chips "
+                 "(pass --request-trace)")
+    if args.fleet is not None and args.fleet > 1:
+        if not (args.analog or args.load_program):
+            ap.error("--fleet programs N independent chip draws "
+                     "(add --analog, or --load-program for replicas)")
+        if args.drift_schedule:
+            ap.error("--drift-schedule is the single-chip lifecycle path; "
+                     "fleet chips age on their own clocks")
+        if args.save_program:
+            ap.error("--save-program persists ONE chip; a fleet is N "
+                     "draws (save a single-chip run, then --fleet with "
+                     "--load-program for replicas)")
+        if args.use_kernel:
+            ap.error("--use-kernel is not threaded through the fleet path "
+                     "(serve chips through the single-engine path)")
+    if args.agreement_slo is not None:
+        if args.fleet is None or args.fleet < 2:
+            ap.error("--agreement-slo gates fleet dispatch "
+                     "(pass --fleet >= 2)")
+        if args.no_ref_check:
+            ap.error("--agreement-slo compares against the digital "
+                     "reference (drop --no-ref-check)")
+        if not (0.0 <= args.agreement_slo <= 1.0):
+            ap.error("--agreement-slo is a top-1-agreement fraction "
+                     "in [0, 1]")
     if args.refresh_below is not None and args.load_program:
         # the artifact deliberately stores no pre-programming weights (the
         # chip is the artifact); refresh rewrites from THIS process's
@@ -290,6 +358,9 @@ def main() -> None:
         ap.error(f"--arch {args.arch}: multi-codebook decoders are not "
                  "servable through the token-stream engine")
     analog = args.analog or args.load_program is not None
+    # --fleet 1 deliberately routes through the single-engine path below:
+    # one chip needs no router, and the byte-identical output is pinned
+    fleet_n = args.fleet if args.fleet is not None and args.fleet > 1 else None
     t0_seconds = (schedule.times[0] if schedule is not None
                   else args.t_hours * 3600.0)
     acfg = AnalogConfig()
@@ -340,8 +411,9 @@ def main() -> None:
               f"t={pcm_lib.format_age(program.t_seconds)}, "
               f"age_history={len(program.age_history)} entries) "
               f"in {time.time()-t0:.2f}s from {args.load_program}{where}")
-    elif analog and not args.per_call:
+    elif analog and not args.per_call and fleet_n is None:
         # Program phase: one pass over the param tree, before any serving.
+        # (A fleet without --load-program compiles its N draws itself.)
         t0 = time.time()
         program = steps.program_for_serving(
             params, acfg, jax.random.PRNGKey(42), mesh=mesh, model_cfg=cfg,
@@ -385,24 +457,25 @@ def main() -> None:
     # so top-1 agreement / logit MSE isolate the analog (quantization + PCM)
     # error -- the accuracy axis of the paper's bitwidth trade (Sec. 7).
     ref_check = analog and not args.no_ref_check
-    paged_kw = {}
-    if args.kv_page_size is not None:
-        paged_kw = dict(
-            paged=True,
-            page_size=args.kv_page_size,
-            n_pages=args.kv_pages,
-            prefill_buckets=(
-                tuple(int(x) for x in args.prefill_buckets.split(",") if x)
-                if args.prefill_buckets else None
-            ),
-        )
-    served = ServingEngine(
-        cfg, acfg, params,
-        n_slots=b, s_max=s_max, program=program,
-        ref_params=ref_params if ref_check else None,
-        src_params=src_params, mesh=mesh, rng=key,
-        **paged_kw,
+    serving_cfg = ServingConfig(
+        n_slots=b,
+        s_max=s_max,
+        paged=args.kv_page_size is not None,
+        page_size=args.kv_page_size if args.kv_page_size is not None else 16,
+        n_pages=args.kv_pages,
+        prefill_buckets=(
+            tuple(int(x) for x in args.prefill_buckets.split(",") if x)
+            if args.prefill_buckets else None
+        ),
+        ref_check=not args.no_ref_check,
     )
+    served = None
+    if fleet_n is None:
+        served = ServingEngine(
+            cfg, acfg, params, serving_cfg, program=program,
+            ref_params=ref_params if ref_check else None,
+            src_params=src_params, mesh=mesh, rng=key,
+        )
 
     def fmt_timing(m):
         per_tok = m.t_decode / max(m.n_steps, 1) * 1e3
@@ -436,6 +509,48 @@ def main() -> None:
                   "decode batch, so continuous-batching generations are "
                   "not bit-identical to solo serving for this family",
                   file=sys.stderr)
+        if fleet_n is not None:
+            # Fleet serving: the same trace spread across N chips behind
+            # the router (see serving/fleet.py for the dispatch/refresh
+            # semantics). --fleet 1 never reaches here by construction.
+            fleet_cfg = FleetConfig(
+                n_chips=fleet_n, agreement_slo=args.agreement_slo
+            )
+            t0 = time.time()
+            if program is not None:
+                router = FleetRouter.from_program(
+                    program, cfg, serving_cfg, fleet_cfg,
+                    ref_params=ref_params if ref_check else None,
+                    src_params=src_params, mesh=mesh,
+                    rng=jax.random.PRNGKey(42),
+                )
+                print(f"fleet: {fleet_n} replicas of the loaded chip draw "
+                      f"in {time.time()-t0:.2f}s")
+            else:
+                router = FleetRouter.build(
+                    params, acfg, cfg, serving_cfg, fleet_cfg,
+                    key=jax.random.PRNGKey(42),
+                    ref_params=ref_params if ref_check else None,
+                    src_params=src_params, mesh=mesh,
+                    b_adc_overrides=overrides,
+                )
+                print(f"programmed {fleet_n} independent chip draws in "
+                      f"{time.time()-t0:.2f}s (b_adc={b_adc}, "
+                      f"t={pcm_lib.format_age(t0_seconds)})")
+            freport = router.run(
+                trace,
+                scheduler=BucketedScheduler() if args.kv_page_size else None,
+            )
+            print(freport.summary())
+            if ref_check:
+                c = freport.counters
+                print(f"accuracy_vs_digital_ref: "
+                      f"top1_agreement={c['top1']:.4f} "
+                      f"decisions={c['decisions']}")
+            longest = max(freport.records, key=lambda r: r.n_new)
+            print("generated token ids (longest request):",
+                  longest.tokens[: min(16, longest.n_new)].tolist())
+            return
         policy = None
         if schedule is not None:
             est_steps = sum(r.max_new_tokens for r in trace) // max(b, 1)

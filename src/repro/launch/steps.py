@@ -45,6 +45,7 @@ def program_for_serving(
     with_mapping: bool = False,
     b_adc_overrides: Optional[dict] = None,
     t_seconds: Optional[float] = None,
+    chip_id: Optional[int] = None,
 ):
     """Program phase of an analog serving deployment -> CiMProgram.
 
@@ -77,6 +78,7 @@ def program_for_serving(
         with_mapping=with_mapping,
         shardings=shardings,
         b_adc_overrides=b_adc_overrides,
+        chip_id=chip_id,
     )
 
 
@@ -110,6 +112,8 @@ def refresh_program(
         transforms=transforms,
         b_adc_overrides=engine.plan_bit_overrides(program) or None,
         t_seconds=pcm_lib.T_C,
+        # a rewrite changes the devices' contents, not which chip they are
+        chip_id=program.chip_id,
     )
 
 

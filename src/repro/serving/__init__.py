@@ -1,8 +1,14 @@
-"""repro.serving -- request-level serving over one programmed CiM chip.
+"""repro.serving -- request-level serving over programmed CiM chips.
 
-Architecture (one PR-4-era ``serve_pass`` rectangle, refactored into three
+Architecture (one PR-4-era ``serve_pass`` rectangle, refactored into
 layers):
 
+* ``config.py``    -- the configuration surface: frozen
+  :class:`ServingConfig` (slots, capacity, paged-KV geometry, prefill
+  bucketing, ref-check) and :class:`FleetConfig` (chip count, aggregate
+  agreement SLO, refresh trigger + stagger discipline). ``ServingEngine``
+  takes a ``ServingConfig``; the pre-config loose kwargs still work for
+  one release behind a single-warning deprecation shim.
 * ``requests.py``  -- the client surface: :class:`Request` (variable-length
   prompt, token budget, EOS, arrival time), :class:`RequestRecord` (what a
   retired request hands back), and :func:`poisson_trace` (the synthetic
@@ -24,7 +30,19 @@ layers):
   all slots, optional digital-reference accuracy counters, and the drift
   lifecycle hooks (:meth:`ServingEngine.age_to`, :class:`DriftPolicy`,
   refresh) -- so a long-running server ages the paper's programmed chip in
-  place while it serves, with zero programming events asserted.
+  place while it serves, with zero programming events asserted. A serving
+  run is an :class:`EngineRun` stepping object (admit / decode / finish),
+  so one engine can drive itself to completion (:meth:`ServingEngine.run`)
+  or be interleaved with siblings by the fleet router.
+* ``fleet.py``     -- :class:`FleetRouter`: N engines over N independent
+  chip draws (or artifact replicas) behind one service. Least-loaded
+  SLO-aware dispatch, per-chip drift clocks, and *staggered refresh*: a
+  chip whose window agreement degrades is drained (in-flight requests
+  migrate to siblings as bit-identical continuations), reprogrammed via
+  ``steps.refresh_program``, and rejoined with a reset age -- with at most
+  ``FleetConfig.max_refreshing`` chips down at once and fleet-wide
+  request conservation + programming-event accounting enforced
+  (:class:`FleetReport`).
 
   With ``paged=True`` the slot rectangles become a block/paged KV cache
   (``models.attention.PagedKVCache``): resident memory is the page pool,
@@ -51,10 +69,20 @@ warns when a trace targets an MoE arch (paged prefill therefore drops to
 one request per call for MoE periods).
 """
 
+from repro.serving.config import (  # noqa: F401
+    FleetConfig,
+    ServingConfig,
+)
 from repro.serving.engine import (  # noqa: F401
     DriftPolicy,
+    EngineRun,
     ServeReport,
     ServingEngine,
+)
+from repro.serving.fleet import (  # noqa: F401
+    FleetRecord,
+    FleetReport,
+    FleetRouter,
 )
 from repro.serving.paging import (  # noqa: F401
     PageAllocator,

@@ -8,6 +8,20 @@ slot-based KV cache (``models.lm.init_lm_cache(..., per_slot=True)``: B
 independent request slots with per-slot lengths), and a decode loop in
 which ONE jitted step advances every active slot together.
 
+Construction takes a frozen :class:`~repro.serving.config.ServingConfig`
+(slots, capacity, the paged-cache geometry, prefill bucketing, ref-check)
+plus the live objects -- program, reference/source params, mesh, rng -- as
+keywords::
+
+    engine = ServingEngine.for_program(
+        program, model_cfg, ServingConfig(n_slots=8, s_max=160),
+        ref_params=params,
+    )
+
+The pre-config loose kwargs (``n_slots=...``, ``paged=...``, ...) still
+work for one release through a deprecation shim that emits exactly one
+:class:`DeprecationWarning` per construction.
+
 Lifecycle of a request (see ``serving/scheduler.py`` for admission):
 
   1. *admit*  -- the request is prefilled ALONE (batch=1, its exact prompt
@@ -26,6 +40,15 @@ capacity routing), a request's generation is bit-identical to serving it
 alone on a fresh engine -- continuous batching is semantically inert; it
 only changes *when* work happens, never *what* is computed. Tests pin this.
 
+A serving run is an :class:`EngineRun`: the per-run state (queue, caches,
+slots, counters, drift bookkeeping) plus the stepping surface
+(:meth:`EngineRun.admit_arrived` / :meth:`EngineRun.decode_step` /
+:meth:`EngineRun.finish`). :meth:`ServingEngine.run` drives one run to
+completion; the fleet router (``serving/fleet.py``) interleaves many runs
+-- one per chip -- stepping each engine in turn and migrating live slots
+between them (:meth:`EngineRun.live` / :meth:`EngineRun.evict`) when a
+chip drains for a refresh.
+
 The engine composes with the drift lifecycle: :meth:`age_to` advances the
 chip between decode steps via ``engine.age_program`` (zero programming
 events, asserted), and a :class:`DriftPolicy` does it on a step cadence
@@ -39,6 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Any, Optional
 
@@ -62,11 +86,19 @@ from repro.models.lm import (
     write_cache_slot,
     write_cache_slot_paged,
 )
+from repro.serving.config import ServingConfig
 from repro.serving.paging import PageAllocator, bucket_for, default_buckets
 from repro.serving.requests import Request, RequestRecord
 from repro.serving.scheduler import ContinuousScheduler
 
 Array = jax.Array
+
+#: constructor keywords the pre-ServingConfig API accepted loosely; they
+#: now route through the deprecation shim into a ServingConfig
+_LEGACY_CONFIG_KEYS = frozenset(
+    {"n_slots", "s_max", "paged", "page_size", "n_pages",
+     "prefill_buckets", "prefill_batch"}
+)
 
 
 def _kv_cache_bytes(cache) -> int:
@@ -114,7 +146,7 @@ class _Slot:
     admit_t: float
     # paged mode: page ids this slot currently owns, and how many more
     # pages of the pool are reserved (but not yet allocated) for its
-    # worst-case growth -- see ServingEngine.run
+    # worst-case growth -- see EngineRun.decode_step
     pages: Optional[list] = None
     reserve_left: int = 0
 
@@ -211,15 +243,19 @@ class ServeReport:
 class ServingEngine:
     """Request-level serving over one model (programmed chip or digital).
 
-    ``analog_cfg``/``params`` are what the forward pass executes --
-    for a compiled chip use :meth:`for_program` (or pass ``program=``),
-    which also enables :meth:`age_to`/:class:`DriftPolicy`. ``ref_params``
-    switches on the accuracy counters: a digital full-precision reference
-    decoded in lockstep, teacher-forced on the served token stream (the
-    same counters ``serve.py`` always printed). ``src_params`` is the
-    refresh policy's reprogramming source.
+    ``config`` is a :class:`~repro.serving.config.ServingConfig` -- the
+    documented constructor is ``ServingEngine(model_cfg, analog_cfg,
+    params, ServingConfig(...))`` (legacy loose kwargs route through a
+    one-warning deprecation shim). ``analog_cfg``/``params`` are what the
+    forward pass executes -- for a compiled chip use :meth:`for_program`
+    (or pass ``program=``), which also enables
+    :meth:`age_to`/:class:`DriftPolicy`. ``ref_params`` switches on the
+    accuracy counters (unless ``config.ref_check`` is False): a digital
+    full-precision reference decoded in lockstep, teacher-forced on the
+    served token stream (the same counters ``serve.py`` always printed).
+    ``src_params`` is the refresh policy's reprogramming source.
 
-    ``paged=True`` switches the slot cache to the block/paged layout:
+    ``config.paged`` switches the slot cache to the block/paged layout:
     ``s_max`` becomes the per-slot VIRTUAL capacity while resident KV
     memory is ``n_pages * page_size`` rows per layer (default: the same
     footprint as the rectangle, ``n_slots * ceil(s_max/page_size) + 1``
@@ -243,33 +279,58 @@ class ServingEngine:
         model_cfg: ModelConfig,
         analog_cfg: AnalogConfig,
         params: Any,
+        config: Optional[ServingConfig] = None,
         *,
-        n_slots: int,
-        s_max: int,
         program: Optional[CiMProgram] = None,
         ref_params: Any = None,
         src_params: Any = None,
         mesh: Any = None,
         rng: Optional[Array] = None,
-        paged: bool = False,
-        page_size: int = 16,
-        n_pages: Optional[int] = None,
-        prefill_buckets: Optional[tuple] = None,
-        prefill_batch: int = 4,
+        **legacy,
     ):
+        if legacy:
+            unknown = sorted(set(legacy) - _LEGACY_CONFIG_KEYS)
+            if unknown:
+                raise TypeError(
+                    f"ServingEngine got unexpected keyword arguments "
+                    f"{unknown}; serving settings live on ServingConfig"
+                )
+            if config is not None:
+                raise TypeError(
+                    "pass serving settings through ServingConfig OR the "
+                    "legacy loose kwargs, not both"
+                )
+            # exactly ONE warning per construction however many legacy
+            # kwargs were passed (pinned by tests)
+            warnings.warn(
+                "ServingEngine's loose serving kwargs (n_slots=..., "
+                "s_max=..., paged=..., ...) are deprecated; pass a "
+                "ServingConfig instead: ServingEngine(model_cfg, "
+                "analog_cfg, params, ServingConfig(n_slots=..., "
+                "s_max=..., ...)). The legacy kwargs will be removed "
+                "in the next release.",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = ServingConfig(**legacy)
+        if config is None:
+            raise TypeError(
+                "ServingEngine needs a ServingConfig, e.g. "
+                "ServingEngine(model_cfg, analog_cfg, params, "
+                "ServingConfig(n_slots=4, s_max=64))"
+            )
         if model_cfg.n_codebooks:
             raise NotImplementedError(
                 "request-level serving drives a single token stream; "
                 "multi-codebook decoders are not supported"
             )
-        if n_slots < 1:
-            raise ValueError("need at least one decode slot")
         self.cfg = model_cfg
         self.acfg = analog_cfg
         self.params = params
         self.program = program
-        self.n_slots = int(n_slots)
-        self.s_max = int(s_max)
+        self.config = config
+        self.n_slots = int(config.n_slots)
+        self.s_max = int(config.s_max)
         self.ref_params = ref_params
         self.src_params = src_params
         self.mesh = mesh
@@ -278,7 +339,7 @@ class ServingEngine:
         #: distinct prefill shapes jitted by this engine (one trace each)
         self._prefill_shapes: set = set()
 
-        self.paged = bool(paged)
+        self.paged = bool(config.paged)
         if self.paged:
             if model_cfg.frontend in ("audio_frames", "vision_patches"):
                 raise NotImplementedError(
@@ -286,22 +347,16 @@ class ServingEngine:
                     f"frontends ({model_cfg.frontend!r}) are not supported "
                     "in paged mode"
                 )
-            if page_size < 1:
-                raise ValueError(f"page_size must be >= 1, got {page_size}")
-            if prefill_batch < 1:
-                raise ValueError(
-                    f"prefill_batch must be >= 1, got {prefill_batch}"
-                )
-            self.page_size = int(page_size)
+            self.page_size = int(config.page_size)
             self.pages_per_slot = -(-self.s_max // self.page_size)
             self.n_pages = int(
-                n_pages
-                if n_pages is not None
+                config.n_pages
+                if config.n_pages is not None
                 else self.n_slots * self.pages_per_slot + 1
             )
             buckets = (
-                tuple(prefill_buckets)
-                if prefill_buckets
+                tuple(config.prefill_buckets)
+                if config.prefill_buckets
                 else default_buckets(self.s_max)
             )
             self.prefill_buckets = tuple(
@@ -314,6 +369,7 @@ class ServingEngine:
             # per-request rng keys and MoE capacity routing both couple a
             # prefill batch's rows to its composition; solo prefill keeps
             # paged serving bit-identical to the rectangular engine
+            prefill_batch = config.prefill_batch
             if analog_cfg.needs_rng or "moe" in block_period(model_cfg):
                 prefill_batch = 1
             self.prefill_batch = int(prefill_batch)
@@ -390,7 +446,7 @@ class ServingEngine:
                 free_cache_slot_paged, donate_argnums=(0,)
             )
 
-        self._ref = ref_params is not None
+        self._ref = ref_params is not None and config.ref_check
         if self._ref:
             dig = AnalogConfig()  # digital full-precision reference
 
@@ -426,11 +482,13 @@ class ServingEngine:
         cls,
         program: CiMProgram,
         model_cfg: ModelConfig,
+        config: Optional[ServingConfig] = None,
         **kw,
     ) -> "ServingEngine":
         """Engine over a compiled chip: executes (program.params, .cfg)."""
         return cls(
-            model_cfg, program.cfg, program.params, program=program, **kw
+            model_cfg, program.cfg, program.params, config,
+            program=program, **kw
         )
 
     def set_program(self, program: CiMProgram) -> None:
@@ -451,8 +509,8 @@ class ServingEngine:
         """Reprogram the chip from the stored source weights.
 
         Returns the number of per-layer programming events consumed, which
-        :meth:`run` adds to its allowance so the zero-delta assertion still
-        holds across a refresh.
+        the run's accounting adds to its allowance so the zero-delta
+        assertion still holds across a refresh.
         """
         from repro.launch import steps
 
@@ -472,11 +530,41 @@ class ServingEngine:
 
     # -- serving -----------------------------------------------------------
 
-    def _prefill_batch(self, req: Request) -> dict:
+    def _prefill_inputs(self, req: Request) -> dict:
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
         if req.features:
             batch.update(req.features)
         return batch
+
+    def start_run(
+        self,
+        *,
+        scheduler: Any = None,
+        drift_policy: Optional[DriftPolicy] = None,
+        now_fn=None,
+        sleep_fn=None,
+        max_steps: Optional[int] = None,
+        track_events: bool = True,
+    ) -> "EngineRun":
+        """Open a fresh :class:`EngineRun` over this engine's (already
+        compiled) closures.
+
+        Each run re-initializes the slot caches, so runs are independent.
+        ``now_fn``/``sleep_fn`` default to the wall clock; tests inject a
+        virtual clock through them. ``track_events=False`` delegates the
+        program-event accounting to an outer owner (the fleet router owns
+        it fleet-wide: with several engines sharing the global counter,
+        per-run deltas would see sibling chips' refreshes).
+        """
+        return EngineRun(
+            self,
+            scheduler=scheduler or ContinuousScheduler(),
+            drift_policy=drift_policy,
+            now_fn=now_fn or time.monotonic,
+            sleep_fn=sleep_fn or time.sleep,
+            max_steps=max_steps,
+            track_events=track_events,
+        )
 
     def run(
         self,
@@ -488,399 +576,540 @@ class ServingEngine:
         sleep_fn=None,
         max_steps: Optional[int] = None,
     ) -> ServeReport:
-        """Serve ``requests`` to completion and return the run's report.
+        """Serve ``requests`` to completion and return the run's report."""
+        run = self.start_run(
+            scheduler=scheduler, drift_policy=drift_policy,
+            now_fn=now_fn, sleep_fn=sleep_fn, max_steps=max_steps,
+        )
+        run.submit(requests)
+        while run.has_work:
+            run.admit_arrived()
+            if run.n_active == 0:
+                if not run.queue:
+                    break
+                # idle: every queued request is still in flight to us
+                run.idle_wait()
+                continue
+            run.decode_step()
+        return run.finish()
 
-        Each call is a fresh serving run over the engine's (already
-        compiled) closures: slot caches are re-initialized, so runs are
-        independent. ``now_fn``/``sleep_fn`` default to the wall clock;
-        tests inject a virtual clock through them.
-        """
-        scheduler = scheduler or ContinuousScheduler()
-        now_fn = now_fn or time.monotonic
-        sleep_fn = sleep_fn or time.sleep
-        for r in requests:
-            if r.prompt.size + r.max_new_tokens > self.s_max:
-                raise ValueError(
-                    f"request {r.rid}: prompt ({r.prompt.size}) + budget "
-                    f"({r.max_new_tokens}) exceeds the engine's s_max="
-                    f"{self.s_max}"
-                )
-            if self.paged and r.features:
-                raise NotImplementedError(
-                    f"request {r.rid}: feature-fed prefill is not "
-                    "supported in paged mode (bucketed prefill pads "
-                    "token prompts)"
-                )
-            if self.paged:
-                need = -(
-                    -(r.prompt.size + r.max_new_tokens) // self.page_size
-                )
-                if need > self.n_pages - 1:
-                    raise ValueError(
-                        f"request {r.rid}: worst case needs {need} pages "
-                        f"of {self.page_size} but the pool has only "
-                        f"{self.n_pages - 1} usable -- it could never be "
-                        "admitted"
-                    )
-        queue = deque(sorted(requests, key=lambda r: r.arrival_t))
 
-        if self.paged:
-            cache = init_lm_cache(
-                self.cfg, self.n_slots, self.s_max, self.cfg.dtype,
+class EngineRun:
+    """One serving run's state plus its stepping surface.
+
+    Created by :meth:`ServingEngine.start_run`. :meth:`ServingEngine.run`
+    drives a run to completion; the fleet router steps several runs (one
+    per chip) in lockstep and uses :meth:`live`/:meth:`evict` to migrate
+    in-flight requests off a chip that is draining for a refresh, and
+    :meth:`refresh_chip` to account the rewrite. The stepping order per
+    tick is *admit then decode* -- exactly the order the single-engine
+    loop uses, so a router-driven run is bit-identical to a solo one.
+    """
+
+    def __init__(
+        self,
+        engine: ServingEngine,
+        *,
+        scheduler: Any,
+        drift_policy: Optional[DriftPolicy],
+        now_fn,
+        sleep_fn,
+        max_steps: Optional[int],
+        track_events: bool,
+    ):
+        self.eng = engine
+        self.scheduler = scheduler
+        self.drift_policy = drift_policy
+        self.now_fn = now_fn
+        self.sleep_fn = sleep_fn
+        self.max_steps = max_steps
+        self.track_events = track_events
+
+        self.queue: deque[Request] = deque()
+        if engine.paged:
+            self.cache = init_lm_cache(
+                engine.cfg, engine.n_slots, engine.s_max, engine.cfg.dtype,
                 stacked=False, paged=True,
-                page_size=self.page_size, n_pages=self.n_pages,
+                page_size=engine.page_size, n_pages=engine.n_pages,
             )
             # engine-side page bookkeeping, fresh per run: the free list
             # plus a reservation counter. Admission reserves a request's
             # WORST-CASE page count (prompt + full budget), so a request
             # that got in can always append its growth pages -- mid-flight
             # pool exhaustion cannot deadlock the decode loop.
-            allocator = PageAllocator(self.n_pages)
-            reserved = 0
-            ps = self.page_size
+            self.allocator = PageAllocator(engine.n_pages)
+            self.reserved = 0
         else:
-            cache = init_lm_cache(
-                self.cfg, self.n_slots, self.s_max, self.cfg.dtype,
+            self.cache = init_lm_cache(
+                engine.cfg, engine.n_slots, engine.s_max, engine.cfg.dtype,
                 stacked=False, per_slot=True,
             )
-        peak_kv_bytes = _kv_cache_bytes(cache)
-        ref_cache = (
+            self.allocator = None
+            self.reserved = 0
+        self.peak_kv_bytes = _kv_cache_bytes(self.cache)
+        self.ref_cache = (
             init_lm_cache(
-                self.cfg, self.n_slots, self.s_max, self.cfg.dtype,
+                engine.cfg, engine.n_slots, engine.s_max, engine.cfg.dtype,
                 stacked=False, per_slot=True,
             )
-            if self._ref
+            if engine._ref
             else None
         )
-        cur = jnp.zeros((self.n_slots, 1), jnp.int32)
-        slots: list[Optional[_Slot]] = [None] * self.n_slots
-        records: list[RequestRecord] = []
-        steps = slot_steps = 0
-        agree_sum = err_sum = 0.0
-        decisions = 0
-        t_prefill = t_decode = 0.0
-        events0 = engine_mod.program_event_count()
-        allowed_events = 0
-        reprograms0 = self.reprograms
-        age_events: list[dict] = []
+        self.cur = jnp.zeros((engine.n_slots, 1), jnp.int32)
+        self.slots: list[Optional[_Slot]] = [None] * engine.n_slots
+        self.records: list[RequestRecord] = []
+        self.steps = 0
+        self.slot_steps = 0
+        self.agree_sum = 0.0
+        self.err_sum = 0.0
+        self.decisions = 0
+        self.t_prefill = 0.0
+        self.t_decode = 0.0
+        self.events0 = engine_mod.program_event_count()
+        self.allowed_events = 0
+        self.reprograms0 = engine.reprograms
+        self.age_events: list[dict] = []
         # drift-policy runtime state
-        pol_idx = 1  # the program is compiled at the schedule's first age
-        last_wall = (
+        self.pol_idx = 1  # the program is compiled at the schedule's first age
+        self.last_wall = (
             drift_policy.schedule.times[0] if drift_policy else None
         )
-        refresh_wall: Optional[float] = None
-        seg_agree, seg_dec = 0.0, 0
-        t_start = now_fn()
+        self.refresh_wall: Optional[float] = None
+        self.seg_agree = 0.0
+        self.seg_dec = 0
+        self.t_start = now_fn()
 
-        def retire(i: int, st: _Slot, by: str) -> None:
-            nonlocal cache, ref_cache, reserved
-            records.append(
-                RequestRecord(
-                    rid=st.req.rid,
-                    slot=i,
-                    tokens=np.asarray(st.tokens, np.int32),
-                    n_prompt=int(st.req.prompt.size),
-                    admit_step=st.admit_step,
-                    finish_step=steps,
-                    arrival_t=st.req.arrival_t,
-                    admit_t=st.admit_t,
-                    finish_t=now_fn() - t_start,
-                    finished_by=by,
+    # -- queries -----------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    @property
+    def elapsed(self) -> float:
+        """Seconds since the run started (on the run's clock)."""
+        return self.now_fn() - self.t_start
+
+    def live(self) -> list[tuple[int, Request, list[int]]]:
+        """Snapshot of live slots: ``(slot, request, tokens so far)``."""
+        return [
+            (i, st.req, list(st.tokens))
+            for i, st in enumerate(self.slots)
+            if st is not None
+        ]
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, requests: list[Request]) -> None:
+        """Validate and enqueue requests (mid-run submission is fine --
+        the fleet router feeds migrated continuations this way)."""
+        eng = self.eng
+        for r in requests:
+            if r.prompt.size + r.max_new_tokens > eng.s_max:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({r.prompt.size}) + budget "
+                    f"({r.max_new_tokens}) exceeds the engine's s_max="
+                    f"{eng.s_max}"
                 )
-            )
-            if self.paged:
-                # zero the slot's pages/table/length, then return the ids
-                # (and the unused tail of its reservation) to the pool
-                pvec = np.zeros((self.pages_per_slot,), np.int32)
-                pvec[: len(st.pages)] = st.pages
-                cache = self._free_slot_paged(
-                    cache, jnp.int32(i), jnp.asarray(pvec)
+            if eng.paged and r.features:
+                raise NotImplementedError(
+                    f"request {r.rid}: feature-fed prefill is not "
+                    "supported in paged mode (bucketed prefill pads "
+                    "token prompts)"
                 )
-                allocator.free(st.pages)
-                reserved -= st.reserve_left
-            else:
-                cache = self._reset_slot(cache, jnp.int32(i))
-            if self._ref:
-                ref_cache = self._reset_slot(ref_cache, jnp.int32(i))
-            slots[i] = None
-
-        def maybe_retire(i: int) -> None:
-            st = slots[i]
-            if st.req.eos_id is not None and st.tokens[-1] == st.req.eos_id:
-                retire(i, st, "eos")
-            elif len(st.tokens) >= st.req.max_new_tokens:
-                retire(i, st, "max_tokens")
-
-        while queue or any(s is not None for s in slots):
-            now = now_fn() - t_start
-            n_arrived = sum(1 for r in queue if r.arrival_t <= now)
-            free = [i for i, s in enumerate(slots) if s is None]
-            n_admit = scheduler.admit(
-                n_arrived, len(free), self.n_slots - len(free)
-            )
-            # a scheduler cannot over-admit: a slot never serves two live
-            # requests, and only arrived requests are admissible
-            n_admit = min(n_admit, n_arrived, len(free))
-            # the queue is arrival-sorted, so the arrived requests are its
-            # prefix; a scheduler's ``order`` hook picks WHICH of them
-            # enter (default: FIFO)
-            arrived = [queue[j] for j in range(n_arrived)]
-            order_fn = getattr(scheduler, "order", None)
-            perm = (
-                list(order_fn(arrived)) if order_fn else list(range(n_arrived))
-            )
-            admitted: list[tuple[Request, int]] = []  # (request, queue idx)
-            pending = 0  # pages claimed by this round's earlier admissions
-            for j in perm[:n_admit]:
-                req = arrived[j]
-                if self.paged:
-                    # reserve the worst case up front (head-of-line
-                    # blocking: stop rather than starve a long request)
-                    need = -(-(req.prompt.size + req.max_new_tokens) // ps)
-                    if allocator.n_free - reserved - pending < need:
-                        break
-                    pending += need
-                admitted.append((req, j))
-            for j in sorted((j for _, j in admitted), reverse=True):
-                del queue[j]
-
-            if self.paged:
-                # group consecutive same-bucket admissions into one padded
-                # prefill call of up to prefill_batch rows
-                k0 = 0
-                reqs = [r for r, _ in admitted]
-                while k0 < len(reqs):
-                    sb = bucket_for(
-                        int(reqs[k0].prompt.size), self.prefill_buckets
+            if eng.paged:
+                need = -(
+                    -(r.prompt.size + r.max_new_tokens) // eng.page_size
+                )
+                if need > eng.n_pages - 1:
+                    raise ValueError(
+                        f"request {r.rid}: worst case needs {need} pages "
+                        f"of {eng.page_size} but the pool has only "
+                        f"{eng.n_pages - 1} usable -- it could never be "
+                        "admitted"
                     )
-                    pb = self._pb_of[sb]
-                    chunk = [reqs[k0]]
-                    while (
-                        len(chunk) < pb
-                        and k0 + len(chunk) < len(reqs)
-                        and bucket_for(
-                            int(reqs[k0 + len(chunk)].prompt.size),
-                            self.prefill_buckets,
-                        )
-                        == sb
-                    ):
-                        chunk.append(reqs[k0 + len(chunk)])
-                    k0 += len(chunk)
-                    toks = np.zeros((pb, sb), np.int32)
-                    lens = np.ones((pb,), np.int32)
-                    for j, req in enumerate(chunk):
-                        toks[j, : req.prompt.size] = req.prompt
-                        lens[j] = req.prompt.size
-                    for j in range(len(chunk), pb):
-                        toks[j] = toks[0]  # dummy rows repeat row 0
-                        lens[j] = lens[0]
-                    t0 = now_fn()
-                    self._prefill_shapes.add((pb, sb))
-                    tokv, logitsv, pcache = self._prefill_bucket(
-                        self.params,
-                        jnp.asarray(toks),
-                        jnp.asarray(lens - 1),
-                        jax.random.fold_in(
-                            self.rng, 1_000_000 + chunk[0].rid
-                        ),
-                    )
-                    for j, req in enumerate(chunk):
-                        slot = free.pop(0)
-                        n_prompt = int(req.prompt.size)
-                        nbp_real = -(-n_prompt // ps)
-                        need = -(-(n_prompt + req.max_new_tokens) // ps)
-                        pages = allocator.alloc(nbp_real)
-                        reserved += need - nbp_real
-                        pvec = np.zeros((-(-sb // ps),), np.int32)
-                        pvec[:nbp_real] = pages
-                        cache = self._write_slot_paged(
-                            cache, pcache, jnp.int32(slot), jnp.int32(j),
-                            jnp.asarray(pvec), jnp.int32(n_prompt),
-                        )
-                        cur = cur.at[slot, 0].set(tokv[j])
-                        if self._ref:
-                            r_logits, r_pcache = self._ref_prefill(
-                                self.ref_params, self._prefill_batch(req)
-                            )
-                            ref_cache = self._write_slot(
-                                ref_cache, r_pcache, jnp.int32(slot)
-                            )
-                            a, e = self._count(logitsv[j : j + 1], r_logits)
-                            agree_sum += float(a[0])
-                            err_sum += float(e[0])
-                            decisions += 1
-                            seg_agree += float(a[0])
-                            seg_dec += 1
-                        slots[slot] = _Slot(
-                            req, [int(tokv[j])], steps, now_fn() - t_start,
-                            pages=pages, reserve_left=need - nbp_real,
-                        )
-                        maybe_retire(slot)
-                    t_prefill += now_fn() - t0
-            else:
-                for req, _ in admitted:
-                    slot = free.pop(0)
-                    t0 = now_fn()
-                    self._prefill_shapes.add((1, int(req.prompt.size)))
-                    tok0, logits0, pcache = self._prefill(
-                        self.params,
-                        self._prefill_batch(req),
-                        jax.random.fold_in(self.rng, 1_000_000 + req.rid),
-                    )
-                    cache = self._write_slot(cache, pcache, jnp.int32(slot))
-                    cur = cur.at[slot, 0].set(tok0[0])
-                    if self._ref:
-                        r_logits, r_pcache = self._ref_prefill(
-                            self.ref_params, self._prefill_batch(req)
-                        )
-                        ref_cache = self._write_slot(
-                            ref_cache, r_pcache, jnp.int32(slot)
-                        )
-                        a, e = self._count(logits0, r_logits)
-                        agree_sum += float(a[0])
-                        err_sum += float(e[0])
-                        decisions += 1
-                        seg_agree += float(a[0])
-                        seg_dec += 1
-                    t_prefill += now_fn() - t0
-                    slots[slot] = _Slot(
-                        req, [int(tok0[0])], steps, now_fn() - t_start
-                    )
-                    maybe_retire(slot)
+        merged = list(self.queue) + list(requests)
+        merged.sort(key=lambda r: r.arrival_t)  # stable: FIFO within ties
+        self.queue = deque(merged)
 
-            if not any(s is not None for s in slots):
-                if not queue:
+    # -- stepping ----------------------------------------------------------
+
+    def idle_wait(self) -> None:
+        """Sleep toward the next queued arrival (nothing is decodable)."""
+        wait = self.queue[0].arrival_t - (self.now_fn() - self.t_start)
+        self.sleep_fn(max(min(wait, 0.01), 1e-4))
+
+    def admit_arrived(self) -> None:
+        """Admission phase: move arrived requests into free decode slots
+        (scheduler-gated), prefilling each and seeding its slot."""
+        eng = self.eng
+        now = self.now_fn() - self.t_start
+        n_arrived = sum(1 for r in self.queue if r.arrival_t <= now)
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        n_admit = self.scheduler.admit(
+            n_arrived, len(free), eng.n_slots - len(free)
+        )
+        # a scheduler cannot over-admit: a slot never serves two live
+        # requests, and only arrived requests are admissible
+        n_admit = min(n_admit, n_arrived, len(free))
+        # the queue is arrival-sorted, so the arrived requests are its
+        # prefix; a scheduler's ``order`` hook picks WHICH of them
+        # enter (default: FIFO)
+        arrived = [self.queue[j] for j in range(n_arrived)]
+        order_fn = getattr(self.scheduler, "order", None)
+        perm = (
+            list(order_fn(arrived)) if order_fn else list(range(n_arrived))
+        )
+        admitted: list[tuple[Request, int]] = []  # (request, queue idx)
+        pending = 0  # pages claimed by this round's earlier admissions
+        for j in perm[:n_admit]:
+            req = arrived[j]
+            if eng.paged:
+                # reserve the worst case up front (head-of-line
+                # blocking: stop rather than starve a long request)
+                need = -(
+                    -(req.prompt.size + req.max_new_tokens) // eng.page_size
+                )
+                if self.allocator.n_free - self.reserved - pending < need:
                     break
-                # idle: every queued request is still in flight to us
-                wait = queue[0].arrival_t - (now_fn() - t_start)
-                sleep_fn(max(min(wait, 0.01), 1e-4))
-                continue
+                pending += need
+            admitted.append((req, j))
+        for j in sorted((j for _, j in admitted), reverse=True):
+            del self.queue[j]
 
-            if self.paged:
-                # lazy growth: a slot whose next decode write crosses a
-                # page boundary gets one page off the free list (always
-                # available -- it was reserved at admission)
-                for i, st in enumerate(slots):
-                    if st is None:
-                        continue
-                    pos = int(st.req.prompt.size) + len(st.tokens) - 1
-                    entry = pos // ps
-                    if entry >= len(st.pages):
-                        (page,) = allocator.alloc(1)
-                        reserved -= 1
-                        st.reserve_left -= 1
-                        st.pages.append(page)
-                        cache = self._append_page(
-                            cache, jnp.int32(i), jnp.int32(entry),
-                            jnp.int32(page),
-                        )
+        if eng.paged:
+            self._admit_paged([r for r, _ in admitted], free)
+        else:
+            self._admit_rect([r for r, _ in admitted], free)
 
-            t0 = now_fn()
-            nxt, logits, cache = self._decode(
-                self.params, cur, cache, jax.random.fold_in(self.rng, steps)
+    def _admit_rect(self, reqs: list[Request], free: list[int]) -> None:
+        eng = self.eng
+        for req in reqs:
+            slot = free.pop(0)
+            t0 = self.now_fn()
+            eng._prefill_shapes.add((1, int(req.prompt.size)))
+            tok0, logits0, pcache = eng._prefill(
+                eng.params,
+                eng._prefill_inputs(req),
+                jax.random.fold_in(eng.rng, 1_000_000 + req.rid),
             )
-            if self._ref:
-                r_logits, ref_cache = self._ref_decode(
-                    self.ref_params, cur, ref_cache
+            self.cache = eng._write_slot(self.cache, pcache, jnp.int32(slot))
+            self.cur = self.cur.at[slot, 0].set(tok0[0])
+            if eng._ref:
+                r_logits, r_pcache = eng._ref_prefill(
+                    eng.ref_params, eng._prefill_inputs(req)
                 )
-                a_v, e_v = self._count(logits, r_logits)
-                a_np, e_np = np.asarray(a_v), np.asarray(e_v)
-            nxt_np = np.asarray(nxt)
-            t_decode += now_fn() - t0
-            steps += 1
-            active = [i for i, s in enumerate(slots) if s is not None]
-            slot_steps += len(active)
-            for i in active:
-                slots[i].tokens.append(int(nxt_np[i]))
-                if self._ref:
-                    agree_sum += float(a_np[i])
-                    err_sum += float(e_np[i])
-                    decisions += 1
-                    seg_agree += float(a_np[i])
-                    seg_dec += 1
-            cur = nxt[:, None]
-            for i in active:
-                maybe_retire(i)
-
-            if drift_policy is not None and steps % drift_policy.every_steps == 0:
-                # refresh check on the segment served since the last tick
-                if (
-                    drift_policy.refresh_below is not None
-                    and self._ref
-                    and seg_dec > 0
-                    and seg_agree / seg_dec < drift_policy.refresh_below
-                ):
-                    top1 = seg_agree / seg_dec
-                    allowed_events += self.refresh(
-                        jax.random.fold_in(self.rng, 7_000_000 + steps)
-                    )
-                    refresh_wall = last_wall
-                    age_events.append(
-                        {
-                            "kind": "reprogram",
-                            "step": steps,
-                            "top1": top1,
-                            "t_device": self.program.t_seconds,
-                        }
-                    )
-                seg_agree, seg_dec = 0.0, 0
-                if pol_idx < len(drift_policy.schedule.times):
-                    t_wall = drift_policy.schedule.times[pol_idx]
-                    pol_idx += 1
-                    last_wall = t_wall
-                    dev = engine_mod.device_age(t_wall, refresh_wall)
-                    self.age_to(dev)
-                    age_events.append(
-                        {
-                            "kind": "age",
-                            "step": steps,
-                            "t_wall": t_wall,
-                            "t_device": dev,
-                        }
-                    )
-
-            if max_steps is not None and steps >= max_steps:
-                raise RuntimeError(
-                    f"serving run exceeded max_steps={max_steps} with "
-                    f"{sum(s is not None for s in slots)} live slots and "
-                    f"{len(queue)} queued requests"
+                self.ref_cache = eng._write_slot(
+                    self.ref_cache, r_pcache, jnp.int32(slot)
                 )
+                self._count_decision(logits0, r_logits, 0)
+            self.t_prefill += self.now_fn() - t0
+            self.slots[slot] = _Slot(
+                req, [int(tok0[0])], self.steps, self.now_fn() - self.t_start
+            )
+            self.maybe_retire(slot)
 
-        wall = now_fn() - t_start
-        delta = engine_mod.program_event_count() - events0
-        if self.program is not None and delta != allowed_events:
+    def _admit_paged(self, reqs: list[Request], free: list[int]) -> None:
+        eng = self.eng
+        ps = eng.page_size
+        # group consecutive same-bucket admissions into one padded
+        # prefill call of up to prefill_batch rows
+        k0 = 0
+        while k0 < len(reqs):
+            sb = bucket_for(
+                int(reqs[k0].prompt.size), eng.prefill_buckets
+            )
+            pb = eng._pb_of[sb]
+            chunk = [reqs[k0]]
+            while (
+                len(chunk) < pb
+                and k0 + len(chunk) < len(reqs)
+                and bucket_for(
+                    int(reqs[k0 + len(chunk)].prompt.size),
+                    eng.prefill_buckets,
+                )
+                == sb
+            ):
+                chunk.append(reqs[k0 + len(chunk)])
+            k0 += len(chunk)
+            toks = np.zeros((pb, sb), np.int32)
+            lens = np.ones((pb,), np.int32)
+            for j, req in enumerate(chunk):
+                toks[j, : req.prompt.size] = req.prompt
+                lens[j] = req.prompt.size
+            for j in range(len(chunk), pb):
+                toks[j] = toks[0]  # dummy rows repeat row 0
+                lens[j] = lens[0]
+            t0 = self.now_fn()
+            eng._prefill_shapes.add((pb, sb))
+            tokv, logitsv, pcache = eng._prefill_bucket(
+                eng.params,
+                jnp.asarray(toks),
+                jnp.asarray(lens - 1),
+                jax.random.fold_in(
+                    eng.rng, 1_000_000 + chunk[0].rid
+                ),
+            )
+            for j, req in enumerate(chunk):
+                slot = free.pop(0)
+                n_prompt = int(req.prompt.size)
+                nbp_real = -(-n_prompt // ps)
+                need = -(-(n_prompt + req.max_new_tokens) // ps)
+                pages = self.allocator.alloc(nbp_real)
+                self.reserved += need - nbp_real
+                pvec = np.zeros((-(-sb // ps),), np.int32)
+                pvec[:nbp_real] = pages
+                self.cache = eng._write_slot_paged(
+                    self.cache, pcache, jnp.int32(slot), jnp.int32(j),
+                    jnp.asarray(pvec), jnp.int32(n_prompt),
+                )
+                self.cur = self.cur.at[slot, 0].set(tokv[j])
+                if eng._ref:
+                    r_logits, r_pcache = eng._ref_prefill(
+                        eng.ref_params, eng._prefill_inputs(req)
+                    )
+                    self.ref_cache = eng._write_slot(
+                        self.ref_cache, r_pcache, jnp.int32(slot)
+                    )
+                    self._count_decision(logitsv[j : j + 1], r_logits, 0)
+                self.slots[slot] = _Slot(
+                    req, [int(tokv[j])], self.steps,
+                    self.now_fn() - self.t_start,
+                    pages=pages, reserve_left=need - nbp_real,
+                )
+                self.maybe_retire(slot)
+            self.t_prefill += self.now_fn() - t0
+
+    def decode_step(self) -> None:
+        """One jitted decode step over all live slots, plus retirement,
+        the drift-policy tick, and the runaway guard."""
+        eng = self.eng
+        if eng.paged:
+            # lazy growth: a slot whose next decode write crosses a
+            # page boundary gets one page off the free list (always
+            # available -- it was reserved at admission)
+            for i, st in enumerate(self.slots):
+                if st is None:
+                    continue
+                pos = int(st.req.prompt.size) + len(st.tokens) - 1
+                entry = pos // eng.page_size
+                if entry >= len(st.pages):
+                    (page,) = self.allocator.alloc(1)
+                    self.reserved -= 1
+                    st.reserve_left -= 1
+                    st.pages.append(page)
+                    self.cache = eng._append_page(
+                        self.cache, jnp.int32(i), jnp.int32(entry),
+                        jnp.int32(page),
+                    )
+
+        t0 = self.now_fn()
+        nxt, logits, self.cache = eng._decode(
+            eng.params, self.cur, self.cache,
+            jax.random.fold_in(eng.rng, self.steps),
+        )
+        if eng._ref:
+            r_logits, self.ref_cache = eng._ref_decode(
+                eng.ref_params, self.cur, self.ref_cache
+            )
+            a_v, e_v = eng._count(logits, r_logits)
+            a_np, e_np = np.asarray(a_v), np.asarray(e_v)
+        nxt_np = np.asarray(nxt)
+        self.t_decode += self.now_fn() - t0
+        self.steps += 1
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        self.slot_steps += len(active)
+        for i in active:
+            self.slots[i].tokens.append(int(nxt_np[i]))
+            if eng._ref:
+                self.agree_sum += float(a_np[i])
+                self.err_sum += float(e_np[i])
+                self.decisions += 1
+                self.seg_agree += float(a_np[i])
+                self.seg_dec += 1
+        self.cur = nxt[:, None]
+        for i in active:
+            self.maybe_retire(i)
+
+        self._drift_tick()
+
+        if self.max_steps is not None and self.steps >= self.max_steps:
+            raise RuntimeError(
+                f"serving run exceeded max_steps={self.max_steps} with "
+                f"{self.n_active} live slots and "
+                f"{len(self.queue)} queued requests"
+            )
+
+    def _count_decision(self, a_logits, r_logits, row: int) -> None:
+        a, e = self.eng._count(a_logits, r_logits)
+        self.agree_sum += float(a[row])
+        self.err_sum += float(e[row])
+        self.decisions += 1
+        self.seg_agree += float(a[row])
+        self.seg_dec += 1
+
+    def _drift_tick(self) -> None:
+        policy = self.drift_policy
+        if policy is None or self.steps % policy.every_steps != 0:
+            return
+        # refresh check on the segment served since the last tick
+        if (
+            policy.refresh_below is not None
+            and self.eng._ref
+            and self.seg_dec > 0
+            and self.seg_agree / self.seg_dec < policy.refresh_below
+        ):
+            top1 = self.seg_agree / self.seg_dec
+            self.refresh_chip(
+                jax.random.fold_in(self.eng.rng, 7_000_000 + self.steps),
+                top1=top1,
+            )
+        self.seg_agree, self.seg_dec = 0.0, 0
+        if self.pol_idx < len(policy.schedule.times):
+            t_wall = policy.schedule.times[self.pol_idx]
+            self.pol_idx += 1
+            self.last_wall = t_wall
+            dev = engine_mod.device_age(t_wall, self.refresh_wall)
+            self.eng.age_to(dev)
+            self.age_events.append(
+                {
+                    "kind": "age",
+                    "step": self.steps,
+                    "t_wall": t_wall,
+                    "t_device": dev,
+                }
+            )
+
+    # -- retirement / migration -------------------------------------------
+
+    def retire(self, i: int, st: _Slot, by: str) -> None:
+        self.records.append(
+            RequestRecord(
+                rid=st.req.rid,
+                slot=i,
+                tokens=np.asarray(st.tokens, np.int32),
+                n_prompt=int(st.req.prompt.size),
+                admit_step=st.admit_step,
+                finish_step=self.steps,
+                arrival_t=st.req.arrival_t,
+                admit_t=st.admit_t,
+                finish_t=self.now_fn() - self.t_start,
+                finished_by=by,
+            )
+        )
+        self._release_slot(i, st)
+
+    def maybe_retire(self, i: int) -> None:
+        st = self.slots[i]
+        if st.req.eos_id is not None and st.tokens[-1] == st.req.eos_id:
+            self.retire(i, st, "eos")
+        elif len(st.tokens) >= st.req.max_new_tokens:
+            self.retire(i, st, "max_tokens")
+
+    def evict(self, i: int) -> tuple[Request, list[int]]:
+        """Remove a LIVE slot without recording a retirement.
+
+        The fleet router's drain path: the request and its tokens so far
+        come back so the router can re-enqueue a continuation on a sibling
+        chip; this run's conservation (slot freed, pages returned) is kept
+        intact.
+        """
+        st = self.slots[i]
+        if st is None:
+            raise ValueError(f"slot {i} holds no live request")
+        self._release_slot(i, st)
+        return st.req, list(st.tokens)
+
+    def _release_slot(self, i: int, st: _Slot) -> None:
+        eng = self.eng
+        if eng.paged:
+            # zero the slot's pages/table/length, then return the ids
+            # (and the unused tail of its reservation) to the pool
+            pvec = np.zeros((eng.pages_per_slot,), np.int32)
+            pvec[: len(st.pages)] = st.pages
+            self.cache = eng._free_slot_paged(
+                self.cache, jnp.int32(i), jnp.asarray(pvec)
+            )
+            self.allocator.free(st.pages)
+            self.reserved -= st.reserve_left
+        else:
+            self.cache = eng._reset_slot(self.cache, jnp.int32(i))
+        if eng._ref:
+            self.ref_cache = eng._reset_slot(self.ref_cache, jnp.int32(i))
+        self.slots[i] = None
+
+    def refresh_chip(self, key: Array, top1: Optional[float] = None) -> int:
+        """Reprogram this run's chip and account the programming events
+        against the run's allowance (kept zero-delta)."""
+        consumed = self.eng.refresh(key)
+        self.allowed_events += consumed
+        self.refresh_wall = self.last_wall
+        self.age_events.append(
+            {
+                "kind": "reprogram",
+                "step": self.steps,
+                "top1": top1,
+                "t_device": self.eng.program.t_seconds,
+            }
+        )
+        return consumed
+
+    # -- completion --------------------------------------------------------
+
+    def finish(self) -> ServeReport:
+        """Close the run: conservation checks + the final report."""
+        eng = self.eng
+        wall = self.now_fn() - self.t_start
+        delta = engine_mod.program_event_count() - self.events0
+        if (
+            self.track_events
+            and eng.program is not None
+            and delta != self.allowed_events
+        ):
             raise RuntimeError(
                 f"serving run recorded {delta} programming events but "
-                f"refreshes account for {allowed_events} -- the programmed "
-                "chip must never be rewritten by serving itself"
+                f"refreshes account for {self.allowed_events} -- the "
+                "programmed chip must never be rewritten by serving itself"
             )
-        if self.paged and (allocator.n_in_use or reserved):
+        if eng.paged and (self.allocator.n_in_use or self.reserved):
             raise RuntimeError(
-                f"page leak: {allocator.n_in_use} pages still allocated "
-                f"and {reserved} still reserved after every request "
-                "retired -- admit/retire must conserve the free list"
+                f"page leak: {self.allocator.n_in_use} pages still "
+                f"allocated and {self.reserved} still reserved after every "
+                "request retired -- admit/retire must conserve the free list"
             )
         counters = None
-        if self._ref:
+        if eng._ref:
             counters = {
-                "top1": agree_sum / max(decisions, 1),
-                "logit_mse": err_sum / max(decisions * self.cfg.vocab, 1),
-                "decisions": decisions,
+                "top1": self.agree_sum / max(self.decisions, 1),
+                "logit_mse": self.err_sum / max(
+                    self.decisions * eng.cfg.vocab, 1
+                ),
+                "decisions": self.decisions,
             }
         return ServeReport(
-            records=records,
-            scheduler=getattr(scheduler, "name", type(scheduler).__name__),
-            n_slots=self.n_slots,
-            n_steps=steps,
-            slot_steps=slot_steps,
-            t_prefill=t_prefill,
-            t_decode=t_decode,
+            records=self.records,
+            scheduler=getattr(
+                self.scheduler, "name", type(self.scheduler).__name__
+            ),
+            n_slots=eng.n_slots,
+            n_steps=self.steps,
+            slot_steps=self.slot_steps,
+            t_prefill=self.t_prefill,
+            t_decode=self.t_decode,
             wall=wall,
             counters=counters,
-            age_events=age_events,
-            reprograms=self.reprograms - reprograms0,
-            program_events_delta=delta - allowed_events,
-            n_prefill_traces=len(self._prefill_shapes),
-            peak_kv_bytes=peak_kv_bytes,
-            peak_pages_in_use=allocator.peak_in_use if self.paged else 0,
+            age_events=self.age_events,
+            reprograms=eng.reprograms - self.reprograms0,
+            program_events_delta=(
+                delta - self.allowed_events if self.track_events else 0
+            ),
+            n_prefill_traces=len(eng._prefill_shapes),
+            peak_kv_bytes=self.peak_kv_bytes,
+            peak_pages_in_use=(
+                self.allocator.peak_in_use if eng.paged else 0
+            ),
         )

@@ -1,0 +1,612 @@
+"""Fleet serving: N programmed chips behind one router.
+
+Everything below ``serving/fleet.py`` serves ONE programmed chip. A
+production deployment of the paper's always-on accelerator is a *fleet*:
+each PCM chip is self-contained model storage with its own write-noise
+draw and its own drift clock, so chips are non-interchangeable replicas
+with per-chip age/accuracy state -- the physical reality the measurement
+papers (Xiao et al., Luquin et al.) report as chip-to-chip variation.
+
+:class:`FleetRouter` owns N :class:`~repro.serving.engine.ServingEngine`
+instances -- N independent chip draws (:meth:`FleetRouter.build`:
+``compile_program`` under distinct RNG keys) and/or replicas of one
+cim-program v1 artifact (:meth:`FleetRouter.from_program`) -- and drives
+one :class:`~repro.serving.engine.EngineRun` per chip in a tick loop:
+
+* **dispatch** -- arrived requests go to the least-loaded chip whose
+  recent top-1 agreement (vs the digital reference) clears the fleet's
+  ``agreement_slo``; if no chip clears it, least-loaded wins outright
+  (availability beats the SLO -- the router must not deadlock traffic).
+* **step** -- every up chip admits then decodes once (the same
+  admit-then-decode order the single-engine loop uses, so a fleet of one
+  chip is bit-identical to no fleet at all).
+* **staggered refresh** -- at each health check (every ``check_every``
+  ticks) a chip whose window agreement fell below ``refresh_below`` is
+  *drained*: its in-flight requests migrate losslessly to sibling chips
+  (a continuation request re-prefills from the already-generated stream,
+  so the destination chip produces the bit-identical remainder it would
+  have produced serving that stream from scratch), the chip sits out
+  ``refresh_steps`` ticks (the modelled PCM write latency), is
+  reprogrammed from the stored source weights (``steps.refresh_program``:
+  fresh write noise, age reset to t_c), and rejoins. At most
+  ``max_refreshing`` chips are ever down at once, so the fleet keeps
+  serving -- :class:`FleetReport` records the worst aggregate-agreement
+  window so a refresh storm can be *asserted* to never dip below the SLO.
+
+Conservation is enforced, not hoped for: every submitted request retires
+exactly once fleet-wide (eviction removes a request from its source run
+*without* recording a retirement; the continuation retires on the
+destination), and the router does the fleet-level programming-event
+accounting the per-run assertion cannot (N engines share the global
+event counter): the run's total event delta must equal exactly what its
+refreshes consumed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core import engine as engine_mod
+from repro.core.engine import CiMProgram
+from repro.models.common import ModelConfig
+from repro.serving.config import FleetConfig, ServingConfig
+from repro.serving.engine import DriftPolicy, ServeReport, ServingEngine
+from repro.serving.requests import Request
+from repro.serving.scheduler import BucketedScheduler, ContinuousScheduler
+
+
+@dataclasses.dataclass
+class FleetRecord:
+    """One request's fleet-level completion record.
+
+    ``tokens`` is the full generated stream stitched across every chip
+    that served the request (migration segments + the final chip's
+    remainder); ``chips`` lists them in serving order, so
+    ``migrations == len(chips) - 1``.
+    """
+
+    rid: int
+    tokens: np.ndarray
+    n_prompt: int
+    chips: tuple[int, ...]
+    arrival_t: float
+    finish_t: float
+    finished_by: str
+
+    @property
+    def n_new(self) -> int:
+        return int(self.tokens.size)
+
+    @property
+    def migrations(self) -> int:
+        return len(self.chips) - 1
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_t - self.arrival_t
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """What a fleet run produced: stitched records, per-chip reports,
+    refresh events, and the SLO evidence."""
+
+    records: list[FleetRecord]
+    per_chip: list[ServeReport]
+    events: list[dict]  # drain / reprogram / rejoin, in tick order
+    #: one dict per health-check window with fleet-wide decisions
+    #: (``{"tick", "top1", "decisions", "any_down"}``); ``any_down`` marks
+    #: windows during which at least one chip was drained or refreshing --
+    #: the windows the refresh-storm SLO claim is about
+    windows: list[dict]
+    counters: Optional[dict]
+    n_chips: int
+    n_ticks: int
+    wall: float
+    program_events_delta: int  # beyond what refreshes consumed: always 0
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.records)
+
+    @property
+    def n_generated(self) -> int:
+        return sum(r.n_new for r in self.records)
+
+    @property
+    def n_migrated(self) -> int:
+        return sum(1 for r in self.records if r.migrations)
+
+    @property
+    def reprograms(self) -> int:
+        return sum(1 for e in self.events if e["kind"] == "reprogram")
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.n_generated / max(self.wall, 1e-9)
+
+    @property
+    def window_agreements(self) -> list[float]:
+        return [w["top1"] for w in self.windows]
+
+    @property
+    def min_window_agreement(self) -> Optional[float]:
+        return min(self.window_agreements) if self.windows else None
+
+    @property
+    def min_down_window_agreement(self) -> Optional[float]:
+        """Worst aggregate-agreement window *while a chip was down* --
+        the refresh-storm SLO evidence (None if no chip ever went down)."""
+        vals = [w["top1"] for w in self.windows if w["any_down"]]
+        return min(vals) if vals else None
+
+    def tokens_of(self, rid: int) -> np.ndarray:
+        """Full stitched generation of one request (across migrations)."""
+        for r in self.records:
+            if r.rid == rid:
+                return r.tokens
+        raise KeyError(rid)
+
+    def latency_s(self, pct: float) -> float:
+        """Arrival-to-retirement latency percentile (seconds), fleet-wide."""
+        if not self.records:
+            return 0.0
+        return float(np.percentile([r.latency_s for r in self.records], pct))
+
+    def summary(self) -> str:
+        line = (
+            f"fleet: chips={self.n_chips} requests={self.n_requests} "
+            f"tokens={self.n_generated} ticks={self.n_ticks} "
+            f"tokens_per_s={self.tokens_per_s:.1f} "
+            f"p95_ms={self.latency_s(95) * 1e3:.0f} "
+            f"migrated={self.n_migrated} reprograms={self.reprograms} "
+            f"program_events_delta={self.program_events_delta}"
+        )
+        if self.min_window_agreement is not None:
+            line += f" min_window_agreement={self.min_window_agreement:.4f}"
+        if self.counters is not None:
+            line += f" top1_agreement={self.counters['top1']:.4f}"
+        return line
+
+
+class FleetRouter:
+    """One service over N programmed chips (see the module docstring).
+
+    ``engines`` must be homogeneous (one :class:`ServingConfig` across the
+    fleet -- migration relies on a continuation fitting any sibling's
+    ``s_max``) and exactly ``fleet_cfg.n_chips`` of them. Refresh
+    (``fleet_cfg.refresh_below`` or a forced drain) additionally needs
+    every engine to carry ``src_params`` (the reprogramming source) and,
+    for the agreement trigger, reference counters (``ref_params`` with
+    ``config.ref_check``).
+    """
+
+    def __init__(
+        self,
+        engines: list[ServingEngine],
+        fleet_cfg: FleetConfig,
+        *,
+        rng: Optional[jax.Array] = None,
+    ):
+        if len(engines) != fleet_cfg.n_chips:
+            raise ValueError(
+                f"FleetConfig says n_chips={fleet_cfg.n_chips} but "
+                f"{len(engines)} engines were given"
+            )
+        if len({e.config for e in engines}) != 1:
+            raise ValueError(
+                "fleet engines must share one ServingConfig -- migration "
+                "re-prefills a continuation on any sibling, so every chip "
+                "needs the same slots/s_max/paging geometry"
+            )
+        self.engines = engines
+        self.fleet_cfg = fleet_cfg
+        self.rng = jax.random.PRNGKey(0) if rng is None else rng
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        params: Any,
+        analog_cfg: Any,
+        model_cfg: ModelConfig,
+        serving_cfg: ServingConfig,
+        fleet_cfg: FleetConfig,
+        *,
+        key: jax.Array,
+        ref_params: Any = None,
+        src_params: Any = None,
+        mesh: Any = None,
+        t_seconds: Optional[float] = None,
+        b_adc_overrides: Any = None,
+    ) -> "FleetRouter":
+        """Program N independent chips from one weight checkpoint.
+
+        Each chip is its own ``compile_program`` call under a distinct
+        fold of ``key`` -- N physical write-noise draws of the same model,
+        tagged ``chip_id=0..N-1``. ``src_params`` defaults to ``params``
+        when a refresh policy is configured (the checkpoint IS the
+        reprogramming source).
+        """
+        if src_params is None and fleet_cfg.refresh_below is not None:
+            src_params = params
+        engines = []
+        for c in range(fleet_cfg.n_chips):
+            program = engine_mod.compile_program(
+                params,
+                analog_cfg,
+                jax.random.fold_in(key, c),
+                t_seconds=t_seconds,
+                b_adc_overrides=b_adc_overrides,
+                chip_id=c,
+            )
+            engines.append(
+                ServingEngine.for_program(
+                    program, model_cfg, serving_cfg,
+                    ref_params=ref_params, src_params=src_params,
+                    mesh=mesh, rng=jax.random.fold_in(key, 10_000 + c),
+                )
+            )
+        return cls(engines, fleet_cfg, rng=key)
+
+    @classmethod
+    def from_program(
+        cls,
+        program: CiMProgram,
+        model_cfg: ModelConfig,
+        serving_cfg: ServingConfig,
+        fleet_cfg: FleetConfig,
+        *,
+        ref_params: Any = None,
+        src_params: Any = None,
+        mesh: Any = None,
+        rng: Optional[jax.Array] = None,
+    ) -> "FleetRouter":
+        """N replicas of ONE compiled chip (e.g. a loaded v1 artifact).
+
+        Replicas start bit-identical (same programmed draw) but keep
+        independent drift clocks and refresh histories from there -- a
+        refreshed replica reprograms under its own key and diverges, which
+        is exactly the physical story of re-writing a chip.
+        """
+        engines = []
+        for c in range(fleet_cfg.n_chips):
+            engines.append(
+                ServingEngine.for_program(
+                    dataclasses.replace(program, chip_id=c),
+                    model_cfg, serving_cfg,
+                    ref_params=ref_params, src_params=src_params, mesh=mesh,
+                )
+            )
+        return cls(engines, fleet_cfg, rng=rng)
+
+    # -- serving -----------------------------------------------------------
+
+    def run(
+        self,
+        requests: list[Request],
+        *,
+        scheduler: Any = None,
+        drift_policies: Optional[list[Optional[DriftPolicy]]] = None,
+        force_refresh: Optional[dict[int, int]] = None,
+        now_fn=None,
+        sleep_fn=None,
+        max_ticks: Optional[int] = None,
+    ) -> FleetReport:
+        """Serve ``requests`` across the fleet to completion.
+
+        ``scheduler`` is the per-engine admission policy (default:
+        bucketed for paged engines, else continuous). ``drift_policies``
+        ages each chip on its own decode cadence (one policy, or one per
+        chip; ``refresh_below`` must be unset on them -- fleet refresh is
+        router-driven so in-flight work can migrate: set
+        ``FleetConfig.refresh_below`` instead). ``force_refresh`` maps
+        router tick -> chip index to drain at that tick regardless of
+        agreement (the chaos hook the kill-a-chip tests use).
+        """
+        import time as _time
+
+        cfg = self.fleet_cfg
+        n = cfg.n_chips
+        now_fn = now_fn or _time.monotonic
+        sleep_fn = sleep_fn or _time.sleep
+        force_refresh = dict(force_refresh or {})
+
+        if drift_policies is None:
+            policies: list[Optional[DriftPolicy]] = [None] * n
+        elif isinstance(drift_policies, DriftPolicy):
+            policies = [drift_policies] * n
+        else:
+            policies = list(drift_policies)
+            if len(policies) != n:
+                raise ValueError(
+                    f"need one drift policy per chip ({n}), "
+                    f"got {len(policies)}"
+                )
+        for p in policies:
+            if p is not None and p.refresh_below is not None:
+                raise ValueError(
+                    "per-chip DriftPolicy.refresh_below is engine-local "
+                    "(it rewrites mid-flight); fleet refresh must drain "
+                    "and migrate -- set FleetConfig.refresh_below instead"
+                )
+        refresh_enabled = cfg.refresh_below is not None or bool(force_refresh)
+        if refresh_enabled:
+            for c, e in enumerate(self.engines):
+                if e.program is None or e.src_params is None:
+                    raise ValueError(
+                        f"chip {c}: refresh needs a compiled program and "
+                        "src_params on every engine"
+                    )
+        if cfg.refresh_below is not None and not self.engines[0]._ref:
+            raise ValueError(
+                "the agreement refresh trigger needs the reference "
+                "counters: build the engines with ref_params (and "
+                "ref_check on)"
+            )
+
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("request rids must be unique fleet-wide")
+        if scheduler is None:
+            scheduler = (
+                BucketedScheduler()
+                if self.engines[0].paged
+                else ContinuousScheduler()
+            )
+
+        events0 = engine_mod.program_event_count()
+        allowed_events = 0
+        t0 = now_fn()
+        runs = [
+            e.start_run(
+                scheduler=scheduler,
+                drift_policy=policies[c],
+                now_fn=now_fn,
+                sleep_fn=sleep_fn,
+                track_events=False,  # the router accounts fleet-wide
+            )
+            for c, e in enumerate(self.engines)
+        ]
+        pending = deque(sorted(requests, key=lambda r: r.arrival_t))
+        down = [0] * n  # ticks left out of rotation (0 = serving)
+        # router-side bookkeeping for migration stitching and health
+        prefix: dict[int, list[int]] = {}  # rid -> tokens before migration
+        chips_of: dict[int, list[int]] = {r.rid: [] for r in requests}
+        base_agree = [0.0] * n
+        base_dec = [0] * n
+        health: list[Optional[float]] = [None] * n
+        events: list[dict] = []
+        windows: list[dict] = []
+        window_saw_down = False
+        ticks = 0
+
+        def load(c: int) -> int:
+            return runs[c].n_active + len(runs[c].queue)
+
+        def pick_chip(exclude: Optional[int] = None) -> int:
+            up = [
+                c for c in range(n)
+                if not down[c] and c != exclude
+            ]
+            if not up:
+                raise RuntimeError(
+                    "no chip available for dispatch -- max_refreshing "
+                    "must leave at least one chip serving"
+                )
+            ok = [
+                c for c in up
+                if cfg.agreement_slo is None
+                or health[c] is None
+                or health[c] >= cfg.agreement_slo
+            ]
+            pool = ok or up  # never deadlock traffic on the SLO
+            return min(pool, key=lambda c: (load(c), c))
+
+        def dispatch(req: Request, exclude: Optional[int] = None) -> int:
+            c = pick_chip(exclude)
+            runs[c].submit([req])
+            chips_of[req.rid].append(c)
+            return c
+
+        def drain(c: int, tick: int, trigger: str, top1) -> None:
+            nonlocal allowed_events, window_saw_down
+            window_saw_down = True  # even a refresh_steps=0 blink counts
+            migrated = 0
+            # live slots -> lossless continuations on siblings: the
+            # generated stream so far becomes prompt suffix, the budget
+            # shrinks by what was already produced
+            for slot, req, tokens in runs[c].live():
+                runs[c].evict(slot)
+                prefix.setdefault(req.rid, []).extend(tokens)
+                cont = Request(
+                    rid=req.rid,
+                    prompt=np.concatenate(
+                        [req.prompt, np.asarray(tokens, np.int32)]
+                    ),
+                    max_new_tokens=req.max_new_tokens - len(tokens),
+                    eos_id=req.eos_id,
+                    arrival_t=now_fn() - t0,
+                    features=req.features,
+                )
+                dispatch(cont, exclude=c)
+                migrated += 1
+            # queued-but-unadmitted requests just re-dispatch unchanged
+            while runs[c].queue:
+                req = runs[c].queue.popleft()
+                chips_of[req.rid].remove(c)
+                dispatch(req, exclude=c)
+                migrated += 1
+            events.append(
+                {
+                    "kind": "drain", "tick": tick, "chip": c,
+                    "trigger": trigger, "top1": top1, "migrated": migrated,
+                }
+            )
+            if cfg.refresh_steps == 0:
+                rejoin(c, tick)
+            else:
+                down[c] = cfg.refresh_steps
+
+        def rejoin(c: int, tick: int) -> None:
+            nonlocal allowed_events
+            key = jax.random.fold_in(
+                jax.random.fold_in(self.rng, 8_000_000 + tick), c
+            )
+            allowed_events += runs[c].refresh_chip(key)
+            # the chip returns with a clean slate: its degradation window
+            # described the OLD programming
+            base_agree[c] = runs[c].agree_sum
+            base_dec[c] = runs[c].decisions
+            health[c] = None
+            events.append(
+                {
+                    "kind": "reprogram", "tick": tick, "chip": c,
+                    "t_device": self.engines[c].program.t_seconds,
+                }
+            )
+
+        while pending or any(r.has_work for r in runs) or any(down):
+            now = now_fn() - t0
+            while pending and pending[0].arrival_t <= now:
+                dispatch(pending.popleft())
+
+            progressed = False
+            for c in range(n):
+                if down[c]:
+                    continue
+                runs[c].admit_arrived()
+                if runs[c].n_active:
+                    runs[c].decode_step()
+                    progressed = True
+            ticks += 1
+
+            # the write-latency clock runs on router ticks, progress or
+            # not -- a down chip must eventually rejoin
+            for c in range(n):
+                if down[c]:
+                    down[c] -= 1
+                    if down[c] == 0:
+                        rejoin(c, ticks)
+
+            if ticks in force_refresh:
+                c = force_refresh.pop(ticks)
+                if not down[c] and sum(1 for d in down if d) < cfg.max_refreshing:
+                    drain(c, ticks, "forced", None)
+
+            if any(down):
+                window_saw_down = True
+
+            if ticks % cfg.check_every == 0:
+                win_agree, win_dec = 0.0, 0
+                tops: list[tuple[int, float]] = []
+                for c in range(n):
+                    wa = runs[c].agree_sum - base_agree[c]
+                    wd = runs[c].decisions - base_dec[c]
+                    base_agree[c] = runs[c].agree_sum
+                    base_dec[c] = runs[c].decisions
+                    win_agree += wa
+                    win_dec += wd
+                    if wd > 0:
+                        health[c] = wa / wd
+                        if not down[c]:
+                            tops.append((c, wa / wd))
+                if win_dec > 0:
+                    windows.append(
+                        {
+                            "tick": ticks,
+                            "top1": win_agree / win_dec,
+                            "decisions": win_dec,
+                            "any_down": window_saw_down,
+                        }
+                    )
+                window_saw_down = any(down)
+                if cfg.refresh_below is not None:
+                    # worst chip first; stagger: never exceed the down cap
+                    for c, top1 in sorted(tops, key=lambda t: t[1]):
+                        if top1 >= cfg.refresh_below:
+                            break
+                        if sum(1 for d in down if d) >= cfg.max_refreshing:
+                            break
+                        drain(c, ticks, "agreement", top1)
+
+            if not progressed and pending and not any(down):
+                wait = pending[0].arrival_t - (now_fn() - t0)
+                sleep_fn(max(min(wait, 0.01), 1e-4))
+
+            if max_ticks is not None and ticks >= max_ticks:
+                raise RuntimeError(
+                    f"fleet run exceeded max_ticks={max_ticks} with "
+                    f"{len(pending)} pending and "
+                    f"{sum(r.n_active for r in runs)} live requests"
+                )
+
+        per_chip = [r.finish() for r in runs]
+
+        # conservation: every submitted request retired exactly once,
+        # fleet-wide -- migration must neither lose nor duplicate
+        seen: dict[int, Any] = {}
+        for rep in per_chip:
+            for rec in rep.records:
+                if rec.rid in seen:
+                    raise RuntimeError(
+                        f"request {rec.rid} retired on more than one chip "
+                        "-- migration duplicated it"
+                    )
+                seen[rec.rid] = rec
+        lost = sorted(set(rids) - set(seen))
+        if lost:
+            raise RuntimeError(
+                f"requests {lost} were admitted but never retired -- "
+                "migration lost them"
+            )
+
+        by_rid = {r.rid: r for r in requests}
+        records = []
+        for rid in rids:
+            rec = seen[rid]
+            toks = prefix.get(rid, []) + list(np.asarray(rec.tokens))
+            records.append(
+                FleetRecord(
+                    rid=rid,
+                    tokens=np.asarray(toks, np.int32),
+                    n_prompt=int(by_rid[rid].prompt.size),
+                    chips=tuple(chips_of[rid]),
+                    arrival_t=by_rid[rid].arrival_t,
+                    finish_t=rec.finish_t,
+                    finished_by=rec.finished_by,
+                )
+            )
+
+        delta = engine_mod.program_event_count() - events0
+        if delta != allowed_events:
+            raise RuntimeError(
+                f"fleet run recorded {delta} programming events but "
+                f"refreshes account for {allowed_events} -- serving must "
+                "never rewrite a chip outside a router-driven refresh"
+            )
+        counters = None
+        if self.engines[0]._ref:
+            agree = sum(r.agree_sum for r in runs)
+            dec = sum(r.decisions for r in runs)
+            counters = {
+                "top1": agree / max(dec, 1),
+                "decisions": dec,
+            }
+        return FleetReport(
+            records=records,
+            per_chip=per_chip,
+            events=events,
+            windows=windows,
+            counters=counters,
+            n_chips=n,
+            n_ticks=ticks,
+            wall=now_fn() - t0,
+            program_events_delta=delta - allowed_events,
+        )

@@ -1,0 +1,347 @@
+"""Fleet-serving invariants (repro.serving.fleet) and the ServingConfig
+API surface.
+
+The load-bearing chaos claim: a chip killed mid-flight migrates its live
+requests to sibling chips *losslessly* -- the migrated continuation
+re-prefills from the already-generated stream, so the destination chip
+produces the bit-identical remainder it would have produced serving that
+stream from scratch, and fleet-wide every request retires exactly once
+with its full token budget. Plus the refresh lifecycle (a drained chip
+rejoins reprogrammed, age reset to t_c, same chip_id), artifact replicas
+(``from_program`` chips are bit-identical to the saved draw), and the
+ServingConfig deprecation shim (exactly one warning for legacy kwargs).
+
+Runs use a deterministic virtual clock (now advances a fixed dt per call,
+sleep jumps), so tick alignment -- and therefore which requests are
+in-flight when the storm hits -- is reproducible.
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import load_program, save_program
+from repro.core import engine as engine_mod
+from repro.core import pcm as pcm_lib
+from repro.core.analog import AnalogConfig
+from repro.core.engine import DriftSchedule
+from repro.models import ModelConfig, lm_init
+from repro.serving import (
+    DriftPolicy,
+    FleetConfig,
+    FleetRouter,
+    Request,
+    ServingConfig,
+    ServingEngine,
+    poisson_trace,
+)
+
+DIGITAL = AnalogConfig()
+ACFG = AnalogConfig().infer(b_adc=8, t_seconds=86400.0)
+S_MAX = 24
+
+
+class _Clock:
+    """Deterministic virtual time (the test_serving_engine.py idiom, plus
+    a fixed per-``now()`` advance so arrivals interleave with ticks)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self):
+        self.t += 5e-4
+        return self.t
+
+    def sleep(self, dt):
+        self.t += max(dt, 1e-4)
+
+
+@pytest.fixture(scope="module")
+def dense_cfg():
+    return ModelConfig(name="t", family="dense", n_kv_heads=2).smoke()
+
+
+@pytest.fixture(scope="module")
+def dense_params(dense_cfg):
+    return lm_init(jax.random.PRNGKey(0), dense_cfg)
+
+
+def _trace(cfg, n=8, key=5, new_tokens=(6, 12)):
+    return poisson_trace(
+        jax.random.PRNGKey(key), n, vocab=cfg.vocab, rate=500.0,
+        prompt_lens=(4, 8), new_tokens=new_tokens,
+    )
+
+
+@pytest.fixture(scope="module")
+def storm(dense_cfg, dense_params):
+    """One 3-chip fleet, one trace, one forced mid-flight kill of chip 0
+    -- shared by the chaos tests below (the run is deterministic)."""
+    router = FleetRouter.build(
+        dense_params, ACFG, dense_cfg,
+        ServingConfig(n_slots=2, s_max=S_MAX),
+        FleetConfig(n_chips=3, refresh_steps=2),
+        key=jax.random.PRNGKey(42),
+        ref_params=dense_params, src_params=dense_params,
+    )
+    trace = _trace(dense_cfg)
+    clock = _Clock()
+    rep = router.run(
+        trace, force_refresh={3: 0},
+        now_fn=clock.now, sleep_fn=clock.sleep, max_ticks=2000,
+    )
+    return router, trace, rep
+
+
+# ------------------------------------------------------- chaos: migration
+
+
+def test_storm_conserves_every_request(storm):
+    """Kill a chip mid-flight: zero lost, zero duplicated, full budgets."""
+    _, trace, rep = storm
+    assert len(rep.records) == len(trace)
+    assert len({r.rid for r in rep.records}) == len(trace)
+    budget_of = {r.rid: r.max_new_tokens for r in trace}
+    for rec in rep.records:
+        assert rec.n_new == budget_of[rec.rid], (
+            f"request {rec.rid}: {rec.n_new} of {budget_of[rec.rid]} tokens"
+        )
+    assert rep.program_events_delta == 0
+
+
+def test_storm_migrates_bit_identically(storm):
+    """The acceptance criterion: a migrated request's remainder equals
+    serving the continuation from scratch on the destination chip."""
+    router, trace, rep = storm
+    by_rid = {r.rid: r for r in trace}
+    migrated = [r for r in rep.records if r.migrations]
+    assert migrated, "the forced kill migrated nothing"
+    solos: dict[int, ServingEngine] = {}
+    for rec in migrated:
+        dest = rec.chips[-1]
+        assert dest != 0, "continuations must land on a sibling"
+        req = by_rid[rec.rid]
+        # the destination's own record tells us where the seam is: its
+        # continuation prompt = original prompt + the migrated prefix
+        dest_rec = next(
+            r for r in rep.per_chip[dest].records if r.rid == rec.rid
+        )
+        k = dest_rec.n_prompt - rec.n_prompt
+        assert 0 < k < req.max_new_tokens
+        remainder = np.asarray(dest_rec.tokens)
+        # stitched record = prefix + remainder
+        assert np.array_equal(rec.tokens[k:], remainder)
+        # oracle: a fresh single-slot engine over the destination's chip
+        # draw, fed the continuation, must reproduce the remainder
+        if dest not in solos:
+            solos[dest] = ServingEngine.for_program(
+                router.engines[dest].program, router.engines[dest].cfg,
+                ServingConfig(n_slots=1, s_max=S_MAX),
+            )
+        cont = Request(
+            rid=900_000 + rec.rid,
+            prompt=np.concatenate(
+                [req.prompt, np.asarray(rec.tokens[:k], np.int32)]
+            ),
+            max_new_tokens=req.max_new_tokens - k,
+        )
+        alone = solos[dest].run([cont]).tokens_of(cont.rid)
+        assert np.array_equal(alone, remainder), (
+            f"request {rec.rid} migrated to chip {dest} diverged: "
+            f"{alone[:8]}... vs {remainder[:8]}..."
+        )
+
+
+def test_refreshed_chip_rejoins_young_with_same_identity(storm):
+    """Drain -> reprogram -> rejoin: fresh write noise, age reset to t_c,
+    chip_id preserved, and the event log shows the lifecycle in order."""
+    router, _, rep = storm
+    kinds = [(e["kind"], e["chip"]) for e in rep.events]
+    assert ("drain", 0) in kinds and ("reprogram", 0) in kinds
+    assert kinds.index(("drain", 0)) < kinds.index(("reprogram", 0))
+    assert rep.reprograms == 1
+    prog = router.engines[0].program
+    assert prog.t_seconds == pcm_lib.T_C
+    assert prog.chip_id == 0
+    assert router.engines[0].reprograms == 1
+    # the SLO evidence exists: at least one aggregate window overlapped
+    # the outage
+    assert rep.min_down_window_agreement is not None
+
+
+# --------------------------------------------------- replicas & identity
+
+
+def test_artifact_replicas_serve_bit_identically(dense_cfg, dense_params,
+                                                 tmp_path):
+    """``from_program`` replicas of a saved artifact generate exactly what
+    the source chip draw generates -- and a fleet of one chip is
+    bit-identical to no fleet at all."""
+    program = engine_mod.compile_program(
+        dense_params, ACFG, jax.random.PRNGKey(7), chip_id=11
+    )
+    path = save_program(str(tmp_path / "chip.npz"), program)
+    loaded = load_program(path, dense_params)
+    assert loaded.chip_id == 11  # identity survives the artifact roundtrip
+
+    scfg = ServingConfig(n_slots=2, s_max=S_MAX)
+    router = FleetRouter.from_program(
+        loaded, dense_cfg, scfg, FleetConfig(n_chips=2),
+        rng=jax.random.PRNGKey(1),
+    )
+    assert [e.program.chip_id for e in router.engines] == [0, 1]
+    trace = _trace(dense_cfg, n=5, key=9, new_tokens=(3, 6))
+    clock = _Clock()
+    rep = router.run(
+        trace, now_fn=clock.now, sleep_fn=clock.sleep, max_ticks=2000
+    )
+    solo = ServingEngine.for_program(
+        program, dense_cfg, ServingConfig(n_slots=1, s_max=S_MAX)
+    )
+    for r in trace:
+        assert np.array_equal(rep.tokens_of(r.rid),
+                              solo.run([r]).tokens_of(r.rid))
+
+    one = FleetRouter.from_program(
+        loaded, dense_cfg, scfg, FleetConfig(n_chips=1)
+    )
+    clock = _Clock()
+    rep1 = one.run(
+        trace, now_fn=clock.now, sleep_fn=clock.sleep, max_ticks=2000
+    )
+    eng = ServingEngine.for_program(loaded, dense_cfg, scfg)
+    rep_solo = eng.run(trace)
+    for r in trace:
+        assert np.array_equal(rep1.tokens_of(r.rid),
+                              rep_solo.tokens_of(r.rid))
+
+
+def test_fleet_report_tokens_of(storm):
+    _, trace, rep = storm
+    for rec in rep.records:
+        assert np.array_equal(rep.tokens_of(rec.rid), rec.tokens)
+    with pytest.raises(KeyError):
+        rep.tokens_of(123456)
+
+
+# ------------------------------------------------- ServingConfig surface
+
+
+def test_legacy_kwargs_warn_exactly_once(dense_cfg, dense_params):
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng = ServingEngine(
+            dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=16,
+            paged=True, page_size=8,
+        )
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(x.message) for x in w]
+    assert "ServingConfig" in str(dep[0].message)
+    assert eng.config == ServingConfig(
+        n_slots=2, s_max=16, paged=True, page_size=8
+    )
+
+
+def test_config_construction_is_warning_free(dense_cfg, dense_params):
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("error", DeprecationWarning)
+        ServingEngine(
+            dense_cfg, DIGITAL, dense_params,
+            ServingConfig(n_slots=2, s_max=16),
+        )
+    assert not w
+
+
+def test_config_and_legacy_kwargs_conflict(dense_cfg, dense_params):
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(
+            dense_cfg, DIGITAL, dense_params,
+            ServingConfig(n_slots=2, s_max=16), n_slots=2,
+        )
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        ServingEngine(dense_cfg, DIGITAL, dense_params, slots=2)
+    with pytest.raises(TypeError, match="needs a ServingConfig"):
+        ServingEngine(dense_cfg, DIGITAL, dense_params)
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(n_chips=0),
+        dict(n_chips=2, check_every=0),
+        dict(n_chips=2, max_refreshing=0),
+        dict(n_chips=2, refresh_steps=-1),
+        dict(n_chips=2, agreement_slo=1.5),
+        dict(n_chips=2, refresh_below=-0.1),
+    ],
+)
+def test_fleet_config_validates(kw):
+    with pytest.raises(ValueError):
+        FleetConfig(**kw)
+
+
+# -------------------------------------------------- router preconditions
+
+
+def _digital_engine(cfg, params, **kw):
+    return ServingEngine(
+        cfg, DIGITAL, params, ServingConfig(n_slots=1, s_max=16), **kw
+    )
+
+
+def test_router_rejects_bad_fleets(dense_cfg, dense_params):
+    e1 = _digital_engine(dense_cfg, dense_params)
+    with pytest.raises(ValueError, match="n_chips=2"):
+        FleetRouter([e1], FleetConfig(n_chips=2))
+    other = ServingEngine(
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=2, s_max=16)
+    )
+    with pytest.raises(ValueError, match="share one ServingConfig"):
+        FleetRouter([e1, other], FleetConfig(n_chips=2))
+
+
+def test_router_run_preconditions(dense_cfg, dense_params):
+    engines = [_digital_engine(dense_cfg, dense_params) for _ in range(2)]
+    router = FleetRouter(engines, FleetConfig(n_chips=2))
+    req = Request(rid=1, prompt=np.arange(1, 5, dtype=np.int32),
+                  max_new_tokens=2)
+    # fleet refresh is router-driven; engine-local rewrite would strand
+    # in-flight work
+    policy = DriftPolicy(
+        schedule=DriftSchedule.parse("25,3600"), every_steps=2,
+        refresh_below=0.5,
+    )
+    with pytest.raises(ValueError, match="engine-local"):
+        router.run([req], drift_policies=policy)
+    # a forced refresh needs a reprogrammable chip on every engine
+    with pytest.raises(ValueError, match="refresh needs"):
+        router.run([req], force_refresh={1: 0})
+    # refresh_below on digital engines dies on the same precondition
+    bad = FleetRouter(engines, FleetConfig(n_chips=2, refresh_below=0.5))
+    with pytest.raises(ValueError, match="refresh needs"):
+        bad.run([req])
+    # rids are the fleet-wide conservation key
+    with pytest.raises(ValueError, match="unique"):
+        router.run([req, req])
+    with pytest.raises(ValueError, match="one drift policy per chip"):
+        router.run([req], drift_policies=[None])
+
+
+def test_agreement_trigger_needs_ref_counters(storm, dense_cfg,
+                                              dense_params):
+    """A programmed, refreshable chip still cannot run the agreement
+    trigger without the digital-reference counters."""
+    router, _, _ = storm
+    eng = ServingEngine.for_program(
+        router.engines[1].program, dense_cfg,
+        ServingConfig(n_slots=2, s_max=S_MAX), src_params=dense_params,
+    )
+    blind = FleetRouter(
+        [eng], FleetConfig(n_chips=1, refresh_below=0.5)
+    )
+    req = Request(rid=1, prompt=np.arange(1, 5, dtype=np.int32),
+                  max_new_tokens=2)
+    with pytest.raises(ValueError, match="reference"):
+        blind.run([req])

@@ -174,6 +174,37 @@ BAD_ARGV = {
         "--analog", "--request-trace", "3", "--kv-page-size", "16",
         "--prefill-buckets", "0,32",
     ],
+    "fleet_zero_chips": ["--fleet", "0"],
+    "fleet_without_trace": ["--analog", "--fleet", "2"],
+    "fleet_without_analog_or_artifact": [
+        "--fleet", "2", "--request-trace", "4"
+    ],
+    "fleet_with_drift_schedule": [
+        "--analog", "--fleet", "2", "--request-trace", "4",
+        "--drift-schedule", "25,3600",
+    ],
+    "fleet_with_save_program": [
+        "--analog", "--fleet", "2", "--request-trace", "4",
+        "--save-program", "/tmp/x",
+    ],
+    "fleet_with_use_kernel": [
+        "--analog", "--fleet", "2", "--request-trace", "4", "--use-kernel"
+    ],
+    "agreement_slo_without_fleet": [
+        "--analog", "--request-trace", "3", "--agreement-slo", "0.5"
+    ],
+    "agreement_slo_on_fleet_of_one": [
+        "--analog", "--fleet", "1", "--request-trace", "3",
+        "--agreement-slo", "0.5",
+    ],
+    "agreement_slo_with_no_ref_check": [
+        "--analog", "--fleet", "2", "--request-trace", "4",
+        "--agreement-slo", "0.5", "--no-ref-check",
+    ],
+    "agreement_slo_out_of_range": [
+        "--analog", "--fleet", "2", "--request-trace", "4",
+        "--agreement-slo", "1.5",
+    ],
 }
 
 
@@ -204,6 +235,54 @@ def test_serve_cli_request_trace_smoke(monkeypatch, capsys):
     assert "serving: mode=continuous requests=3" in out
     assert "program_events_delta=0" in out
     assert "accuracy_vs_digital_ref:" in out
+
+
+def test_serve_cli_fleet_smoke(monkeypatch, capsys):
+    """Fleet serving end-to-end through the CLI: two independent chip
+    draws behind the router, request conservation and the fleet-wide
+    programming-event accounting visible in the summary."""
+    from repro.launch import serve
+
+    monkeypatch.setattr(
+        "sys.argv",
+        ["serve", "--analog", "--batch", "2", "--prompt-len", "8",
+         "--tokens", "4", "--request-trace", "6", "--arrival-rate", "200",
+         "--fleet", "2", "--agreement-slo", "0.01"],
+    )
+    serve.main()
+    out = capsys.readouterr().out
+    assert "programmed 2 independent chip draws" in out
+    assert "fleet: chips=2 requests=6" in out
+    assert "program_events_delta=0" in out
+    assert "accuracy_vs_digital_ref:" in out
+
+
+def test_serve_cli_fleet_of_one_is_the_single_engine_path(monkeypatch,
+                                                          capsys):
+    """--fleet 1 must serve exactly like no --fleet at all: same
+    generations, same accuracy counters, no router in sight."""
+    from repro.launch import serve
+
+    argv = ["serve", "--analog", "--batch", "2", "--prompt-len", "8",
+            "--tokens", "4", "--request-trace", "3",
+            "--arrival-rate", "200"]
+    outs = []
+    for extra in ([], ["--fleet", "1"]):
+        monkeypatch.setattr("sys.argv", argv + extra)
+        serve.main()
+        outs.append(capsys.readouterr().out)
+    for out in outs:
+        assert "fleet:" not in out
+        assert "serving: mode=continuous requests=3" in out
+
+    def stable(out):
+        return [
+            line for line in out.splitlines()
+            if line.startswith(("generated token ids",
+                                "accuracy_vs_digital_ref:"))
+        ]
+
+    assert stable(outs[0]) == stable(outs[1])
 
 
 def test_serve_cli_paged_request_trace_smoke(monkeypatch, capsys):

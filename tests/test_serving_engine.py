@@ -32,6 +32,7 @@ from repro.serving import (
     ContinuousScheduler,
     DriftPolicy,
     Request,
+    ServingConfig,
     ServingEngine,
     StaticBatchScheduler,
     poisson_trace,
@@ -81,11 +82,11 @@ def test_continuous_bit_identical_to_solo_on_frozen_chip(dense_cfg, program):
     batching equals serving it ALONE on a fresh single-slot engine."""
     trace = _trace(dense_cfg)
     served = ServingEngine.for_program(
-        program, dense_cfg, n_slots=3, s_max=S_MAX
+        program, dense_cfg, ServingConfig(n_slots=3, s_max=S_MAX)
     )
     rep = served.run(trace)
     solo = ServingEngine.for_program(
-        program, dense_cfg, n_slots=1, s_max=S_MAX
+        program, dense_cfg, ServingConfig(n_slots=1, s_max=S_MAX)
     )
     for r in trace:
         alone = solo.run([r]).tokens_of(r.rid)
@@ -100,7 +101,7 @@ def test_static_and_continuous_schedulers_same_outputs(dense_cfg, program):
         for i, r in enumerate(_trace(dense_cfg, n=6, new_tokens=(3, 4)))
     ]
     served = ServingEngine.for_program(
-        program, dense_cfg, n_slots=3, s_max=S_MAX
+        program, dense_cfg, ServingConfig(n_slots=3, s_max=S_MAX)
     )
     rep_c = served.run(trace, scheduler=ContinuousScheduler())
     rep_s = served.run(trace, scheduler=StaticBatchScheduler())
@@ -124,7 +125,7 @@ def test_digital_engine_matches_full_forward_oracle():
         cfg = _cfg(**kw)
         params = lm_init(jax.random.PRNGKey(0), cfg)
         served = ServingEngine(
-            cfg, DIGITAL, params, n_slots=3, s_max=S_MAX
+            cfg, DIGITAL, params, ServingConfig(n_slots=3, s_max=S_MAX)
         )
         # two staggered-length requests share the batch
         reqs = [
@@ -154,7 +155,7 @@ def test_ref_counters_perfect_agreement_for_digital_engine(
     """Digital engine vs digital reference: the teacher-forced counters
     must read exactly top1=1.0, mse=0 -- pins the counter plumbing."""
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX,
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=2, s_max=S_MAX),
         ref_params=dense_params,
     )
     rep = served.run(_trace(dense_cfg, n=3))
@@ -168,7 +169,7 @@ def test_ref_counters_perfect_agreement_for_digital_engine(
 
 def test_slots_never_serve_two_live_requests(dense_cfg, dense_params):
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=2, s_max=S_MAX)
     )
     rep = served.run(_trace(dense_cfg, n=7, key=3))
     assert rep.n_requests == 7
@@ -184,7 +185,7 @@ def test_slots_never_serve_two_live_requests(dense_cfg, dense_params):
 
 def test_static_scheduler_admits_in_waves(dense_cfg, dense_params):
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=3, s_max=S_MAX
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=3, s_max=S_MAX)
     )
     reqs = [
         Request(rid=i, prompt=np.arange(4), max_new_tokens=4)
@@ -206,7 +207,7 @@ def test_retired_slot_is_reset_before_readmission(dense_cfg, dense_params):
     stale (non-reset) cache row would corrupt the follow-on request, which
     the solo comparison would catch."""
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=S_MAX
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=1, s_max=S_MAX)
     )
     reqs = [
         Request(rid=0, prompt=np.arange(12) % dense_cfg.vocab,
@@ -218,7 +219,7 @@ def test_retired_slot_is_reset_before_readmission(dense_cfg, dense_params):
     reused = [r for r in rep.records if r.rid == 1][0]
     assert reused.slot == 0  # same slot, re-admitted
     fresh = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=S_MAX
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=1, s_max=S_MAX)
     )
     alone = fresh.run([reqs[1]])
     assert np.array_equal(alone.tokens_of(1), rep.tokens_of(1))
@@ -226,7 +227,7 @@ def test_retired_slot_is_reset_before_readmission(dense_cfg, dense_params):
 
 def test_eos_retires_a_request_early(dense_cfg, dense_params):
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=S_MAX
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=1, s_max=S_MAX)
     )
     req = Request(rid=0, prompt=np.arange(6), max_new_tokens=8)
     full = served.run([req]).tokens_of(0)
@@ -244,7 +245,7 @@ def test_eos_retires_a_request_early(dense_cfg, dense_params):
 
 def test_occupancy_and_latency_metrics(dense_cfg, dense_params):
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=2, s_max=S_MAX)
     )
     rep = served.run(_trace(dense_cfg, n=4))
     assert 0.0 < rep.occupancy <= 1.0
@@ -304,7 +305,7 @@ def test_request_validation():
 
 def test_run_rejects_requests_that_overflow_s_max(dense_cfg, dense_params):
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=8
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=1, s_max=8)
     )
     with pytest.raises(ValueError, match="s_max"):
         served.run([Request(rid=0, prompt=np.arange(6), max_new_tokens=6)])
@@ -313,7 +314,7 @@ def test_run_rejects_requests_that_overflow_s_max(dense_cfg, dense_params):
 def test_engine_rejects_codebook_decoders(dense_cfg, dense_params):
     cb_cfg = dataclasses.replace(dense_cfg, n_codebooks=2)
     with pytest.raises(NotImplementedError, match="token stream"):
-        ServingEngine(cb_cfg, DIGITAL, dense_params, n_slots=1, s_max=8)
+        ServingEngine(cb_cfg, DIGITAL, dense_params, ServingConfig(n_slots=1, s_max=8))
 
 
 def test_poisson_trace_shapes_and_arrivals(dense_cfg):
@@ -347,7 +348,7 @@ def test_poisson_arrivals_gate_admission(dense_cfg, dense_params):
         clock["t"] += max(dt, 1e-3)
 
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=2, s_max=S_MAX)
     )
     reqs = [
         Request(rid=0, prompt=np.arange(4), max_new_tokens=2),
@@ -373,13 +374,13 @@ def test_paged_bit_identical_to_rect_across_page_sizes(dense_cfg, program):
         prompt_lens=(4, 9, 16, 23, 33), new_tokens=(3, 10),
     )
     rect = ServingEngine.for_program(
-        program, dense_cfg, n_slots=3, s_max=S_MAX
+        program, dense_cfg, ServingConfig(n_slots=3, s_max=S_MAX)
     )
     rep_r = rect.run(list(trace))
     for ps in (4, 5, 16):
         paged = ServingEngine.for_program(
-            program, dense_cfg, n_slots=3, s_max=S_MAX,
-            paged=True, page_size=ps, prefill_batch=2,
+            program, dense_cfg, ServingConfig(n_slots=3, s_max=S_MAX,
+            paged=True, page_size=ps, prefill_batch=2),
         )
         rep_p = paged.run(list(trace), scheduler=BucketedScheduler())
         for r in trace:
@@ -402,12 +403,12 @@ def test_paged_long_prompts_flat_memory(dense_cfg, program):
         prompt_lens=(16, 150, 300), new_tokens=(3, 6),
     )
     paged = ServingEngine.for_program(
-        program, dense_cfg, n_slots=2, s_max=s_virt,
-        paged=True, page_size=16, n_pages=n_pages, prefill_batch=2,
+        program, dense_cfg, ServingConfig(n_slots=2, s_max=s_virt,
+        paged=True, page_size=16, n_pages=n_pages, prefill_batch=2),
     )
     rep = paged.run(list(long_reqs), scheduler=BucketedScheduler())
     solo = ServingEngine.for_program(
-        program, dense_cfg, n_slots=1, s_max=s_virt
+        program, dense_cfg, ServingConfig(n_slots=1, s_max=s_virt)
     )
     rep_s = solo.run(list(long_reqs))
     for r in long_reqs:
@@ -435,14 +436,14 @@ def test_paged_drift_lifecycle_composition(dense_cfg, dense_params):
     )
     trace = _trace(dense_cfg, n=4, new_tokens=(6, 10))
     rect = ServingEngine.for_program(
-        program, dense_cfg, n_slots=2, s_max=S_MAX
+        program, dense_cfg, ServingConfig(n_slots=2, s_max=S_MAX)
     )
     rep_r = rect.run(trace, drift_policy=policy)
     # prefill_batch=1 + FIFO admission: decode steps align with the
     # rectangular engine's, so the age ticks land at the same steps
     paged = ServingEngine.for_program(
-        program, dense_cfg, n_slots=2, s_max=S_MAX,
-        paged=True, page_size=8, prefill_batch=1,
+        program, dense_cfg, ServingConfig(n_slots=2, s_max=S_MAX,
+        paged=True, page_size=8, prefill_batch=1),
     )
     rep_p = paged.run(trace, drift_policy=policy)
     for r in trace:
@@ -465,13 +466,13 @@ def test_paged_prefill_traces_bounded_by_buckets(dense_cfg, dense_params):
         for i, n in enumerate(lens)
     ]
     paged = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX,
-        paged=True, page_size=8,
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=2, s_max=S_MAX,
+        paged=True, page_size=8),
     )
     rep_p = paged.run(list(reqs), scheduler=BucketedScheduler())
     assert rep_p.n_prefill_traces <= len(paged.prefill_buckets)
     rect = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=2, s_max=S_MAX)
     )
     rep_r = rect.run(list(reqs))
     assert rep_r.n_prefill_traces == len(lens)
@@ -483,7 +484,7 @@ def test_serve_report_empty_run(dense_cfg, dense_params):
     """Edge case: an empty trace is a valid run -- zero everything, no
     division blowups, summary still renders."""
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=2, s_max=S_MAX)
     )
     rep = served.run([])
     assert rep.n_requests == 0 and rep.n_generated == 0 and rep.n_steps == 0
@@ -500,7 +501,7 @@ def test_serve_report_single_request_no_decode_steps(dense_cfg, dense_params):
     """Edge case: max_new_tokens=1 retires at prefill -- the run has zero
     decode steps yet one generated token, and the metrics stay sane."""
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=2, s_max=S_MAX
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=2, s_max=S_MAX)
     )
     rep = served.run(
         [Request(rid=7, prompt=np.arange(6), max_new_tokens=1)]
@@ -518,8 +519,8 @@ def test_serve_report_single_request_no_decode_steps(dense_cfg, dense_params):
 
 def test_paged_engine_validation(dense_cfg, dense_params):
     mk = lambda **kw: ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=16,
-        paged=True, **kw
+        dense_cfg, DIGITAL, dense_params,
+        ServingConfig(n_slots=1, s_max=16, paged=True, **kw),
     )
     with pytest.raises(ValueError, match="page_size"):
         mk(page_size=0)
@@ -535,13 +536,13 @@ def test_paged_engine_validation(dense_cfg, dense_params):
         with pytest.raises(ValueError, match="position-free"):
             ServingEngine(
                 cfg, DIGITAL, lm_init(jax.random.PRNGKey(0), cfg),
-                n_slots=1, s_max=16, paged=True,
+                ServingConfig(n_slots=1, s_max=16, paged=True),
             )
     audio_cfg = dataclasses.replace(dense_cfg, frontend="audio_frames")
     with pytest.raises(NotImplementedError, match="feature-fed"):
         ServingEngine(
-            audio_cfg, DIGITAL, dense_params, n_slots=1, s_max=16,
-            paged=True,
+            audio_cfg, DIGITAL, dense_params, ServingConfig(n_slots=1, s_max=16,
+            paged=True),
         )
 
 
@@ -549,16 +550,16 @@ def test_paged_run_rejects_infeasible_and_feature_requests(
     dense_cfg, dense_params
 ):
     tight = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=48,
-        paged=True, page_size=8, n_pages=3,  # 2 usable pages = 16 rows
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=1, s_max=48,
+        paged=True, page_size=8, n_pages=3),  # 2 usable pages = 16 rows
     )
     with pytest.raises(ValueError, match="never be admitted"):
         tight.run(
             [Request(rid=0, prompt=np.arange(20), max_new_tokens=10)]
         )
     roomy = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=48,
-        paged=True, page_size=8,
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=1, s_max=48,
+        paged=True, page_size=8),
     )
     with pytest.raises(NotImplementedError, match="paged mode"):
         roomy.run(
@@ -631,7 +632,7 @@ def test_drift_policy_ages_chip_between_steps(dense_cfg, dense_params):
         jax.random.PRNGKey(5),
     )
     served = ServingEngine.for_program(
-        program, dense_cfg, n_slots=2, s_max=S_MAX,
+        program, dense_cfg, ServingConfig(n_slots=2, s_max=S_MAX),
     )
     policy = DriftPolicy(
         DriftSchedule((25.0, 3600.0, 86400.0)), every_steps=2
@@ -653,7 +654,7 @@ def test_drift_policy_refresh_on_degraded_agreement(dense_cfg, dense_params):
         jax.random.PRNGKey(6),
     )
     served = ServingEngine.for_program(
-        program, dense_cfg, n_slots=2, s_max=S_MAX,
+        program, dense_cfg, ServingConfig(n_slots=2, s_max=S_MAX),
         ref_params=dense_params, src_params=dense_params,
     )
     policy = DriftPolicy(
@@ -677,7 +678,7 @@ def test_drift_policy_validation():
 
 def test_age_to_requires_a_program(dense_cfg, dense_params):
     served = ServingEngine(
-        dense_cfg, DIGITAL, dense_params, n_slots=1, s_max=8
+        dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=1, s_max=8)
     )
     with pytest.raises(RuntimeError, match="digital"):
         served.age_to(3600.0)
