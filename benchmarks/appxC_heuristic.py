@@ -8,15 +8,13 @@ the PCM chain at low bitwidth (where the paper says the gap appears)."""
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core.analog import AnalogConfig
-from repro.core.crossbar import conv_weight_as_matrix, im2col
+from repro.core.crossbar import im2col
 from repro.core.heuristic_ranges import calibrate_model_ranges
 from repro.data.pipeline import batch_at
-from repro.models.analognet import _spatial_sizes
 
 
 def _collect_sample_acts(params, cfg):

@@ -34,10 +34,10 @@ run; the CSV timing row comes from a separate real-clock storm.
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks.common import csv_row
 from repro import configs
+from repro.clock import VirtualClock
 from repro.core import engine
 from repro.core.analog import AnalogConfig
 from repro.models import lm
@@ -51,21 +51,6 @@ from repro.serving import (
 N_CHIPS = 3
 PROMPT_BUCKETS = (8, 16)
 NEW_TOKENS = (8, 24)
-
-
-class _Clock:
-    """Deterministic virtual time: each ``now()`` advances half a
-    millisecond (a stand-in decode cadence), ``sleep`` jumps forward."""
-
-    def __init__(self):
-        self.t = 0.0
-
-    def now(self) -> float:
-        self.t += 5e-4
-        return self.t
-
-    def sleep(self, dt: float) -> None:
-        self.t += max(dt, 1e-4)
 
 
 def run(fast: bool = False) -> list[str]:
@@ -94,7 +79,7 @@ def run(fast: bool = False) -> list[str]:
     # closures AND measures the fleet's healthy aggregate agreement, which
     # sets the storm SLO (deterministic -- same clock, same windows, every
     # invocation)
-    base_clock = _Clock()
+    base_clock = VirtualClock()
     rep_base = router.run(
         trace, now_fn=base_clock.now, sleep_fn=base_clock.sleep,
         max_ticks=5000,
@@ -112,7 +97,7 @@ def run(fast: bool = False) -> list[str]:
         ),
         rng=jax.random.PRNGKey(3),
     )
-    storm_clock = _Clock()
+    storm_clock = VirtualClock()
     rep = storm_router.run(
         trace, force_refresh={3: 0, 9: 1},
         now_fn=storm_clock.now, sleep_fn=storm_clock.sleep, max_ticks=5000,

@@ -39,9 +39,9 @@ def _execute_mvm_rows(fast: bool) -> list[str]:
     acfg = AnalogConfig().infer(b_adc=8)
     rows = []
     for m, k, n in shapes:
-        key = jax.random.PRNGKey(0)
-        x_q = jax.random.normal(key, (m, k), jnp.float32)
-        w = jax.random.normal(key, (k, n), jnp.float32) * k**-0.5
+        kx, kw = jax.random.split(jax.random.PRNGKey(0))
+        x_q = jax.random.normal(kx, (m, k), jnp.float32)
+        w = jax.random.normal(kw, (k, n), jnp.float32) * k**-0.5
         ra, gdc = jnp.float32(2.0), jnp.float32(1.3)
         plan_o = engine_lib.plan_for(acfg, k, n)
         plan_k = engine_lib.plan_for(
@@ -58,7 +58,9 @@ def _execute_mvm_rows(fast: bool) -> list[str]:
             return engine_lib.execute_mvm(x, w, ra, _p, out_scale=gdc)
 
         iters = 2 if fast else 5
+        # repro-lint: disable=RL003 -- one jit per benchmarked shape is the sweep design; time_call warms up first
         us_o = time_call(jax.jit(oracle), x_q, w, iters=iters)
+        # repro-lint: disable=RL003 -- one jit per benchmarked shape is the sweep design; time_call warms up first
         us_k = time_call(jax.jit(kernel), x_q, w, iters=iters)
         dev = float(jnp.max(jnp.abs(kernel(x_q, w) - oracle(x_q, w))))
         backend = "tpu" if on_tpu else "interpret"
@@ -77,13 +79,14 @@ def run(fast: bool = False) -> list[str]:
     shapes = [(256, 4096, 512)] if fast else [
         (256, 2048, 512), (256, 4096, 512), (512, 8192, 1024)]
     for m, k, n in shapes:
-        key = jax.random.PRNGKey(0)
-        x = jax.random.normal(key, (m, k), jnp.float32)
-        w = jax.random.normal(key, (k, n), jnp.float32) * k**-0.5
+        kx, kw = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        w = jax.random.normal(kw, (k, n), jnp.float32) * k**-0.5
         rd, ra = jnp.float32(4.0), jnp.float32(2.0)
 
         us_ref = time_call(
-            jax.jit(lambda x, w: analog_mvm_ref(x, w, rd, ra)), x, w, iters=2)
+            jax.jit(lambda x, w: analog_mvm_ref(x, w, rd, ra)),  # repro-lint: disable=RL003 -- one jit per benchmarked shape is the sweep design
+            x, w, iters=2)
         us_ker = time_call(
             lambda x, w: analog_mvm(x, w, r_adc=ra, r_dac=rd, interpret=True),
             x, w, iters=2)

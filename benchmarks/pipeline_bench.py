@@ -92,6 +92,7 @@ def _drift_lifecycle_row(cfg, fast: bool) -> str:
         )
         events0 = engine.program_event_count()
         if run is None:
+            # repro-lint: disable=RL003 -- guarded: built exactly once, on the first lifecycle point
             run = jax.jit(lambda p, x, _c=prog.cfg: cnn_apply(p, x, _c, cfg))
 
         def agreement(p) -> float:
@@ -138,6 +139,7 @@ def _bitwidth_sweep_rows(params, cfg, iters: int) -> list[str]:
             params, acfg_b, jax.random.PRNGKey(2),
             transforms=crossbar_transforms(cfg),
         )
+        # repro-lint: disable=RL003 -- one jit per bitwidth config is the sweep design; time_call warms up first
         run = jax.jit(lambda p, x, _c=prog.cfg: cnn_apply(p, x, _c, cfg))
         us = time_call(run, prog.params, xp, iters=iters)
         agree = float(

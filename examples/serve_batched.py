@@ -46,8 +46,10 @@ def main() -> None:
 
     cfg = configs.get_smoke(args.arch)
     key = jax.random.PRNGKey(1)
+    # one consumer per subkey: trace draw, chip programming, fleet build
+    k_trace, k_prog, k_fleet = jax.random.split(key, 3)
     trace = poisson_trace(
-        key, args.requests, vocab=cfg.vocab,
+        k_trace, args.requests, vocab=cfg.vocab,
         prompt_lens=tuple(sorted({max(1, args.prompt_len // 2),
                                   args.prompt_len})),
         new_tokens=(max(1, args.new_tokens // 4), args.new_tokens),
@@ -63,7 +65,7 @@ def main() -> None:
     # Program-once deployment: the PCM chain runs a single time here; every
     # prefill/decode step executes the programmed conductances.
     program = engine.compile_program(
-        params, AnalogConfig().infer(b_adc=8, t_seconds=86400.0), key
+        params, AnalogConfig().infer(b_adc=8, t_seconds=86400.0), k_prog
     )
     analog = ServingEngine.for_program(program, cfg, serving_cfg)
     rep_a = analog.run(trace)
@@ -92,7 +94,7 @@ def main() -> None:
         # router (each its own write-noise draw and drift clock).
         router = FleetRouter.build(
             params, AnalogConfig().infer(b_adc=8, t_seconds=86400.0),
-            cfg, serving_cfg, FleetConfig(n_chips=args.fleet), key=key,
+            cfg, serving_cfg, FleetConfig(n_chips=args.fleet), key=k_fleet,
         )
         rep_f = router.run(trace)
         print(f"fleet    {rep_f.summary()}")

@@ -10,7 +10,6 @@ import json
 
 import jax
 
-from repro.core.analog import AnalogConfig
 from repro.data.pipeline import PipelineConfig, iterate
 from repro.models import ModelConfig, lm
 from repro.training.loop import TrainConfig, run_two_stage

@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from collections import defaultdict
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -1,0 +1,63 @@
+"""repro.analysis.lint: JAX-aware static analysis for the repo's invariants.
+
+The reproduction rests on invariants that are cheap to break silently and
+expensive to notice late:
+
+* **bit-exact programmed chips** -- every reduction feeding program state
+  (GDC numerators/denominators) must be order-independent
+  (``pcm.det_sum``), or a chip programmed under pjit is not the chip a
+  single host would program;
+* **independent per-chip RNG draws** -- a PRNG key consumed twice
+  correlates draws that the fleet's agreement SLOs assume independent;
+* **a bounded jit-trace count** -- bucketed prefill promises one trace per
+  bucket; a retrace hazard (jit wrapper built inside a loop, loop-varying
+  shapes/static args) silently turns serving into a compile loop;
+* **no host-device sync on the decode hot path** and **no wall-clock or
+  stdlib randomness in library code** -- deterministic-clock fleet tests
+  and throughput both die by a thousand `.item()`/`time.time()` cuts.
+
+Each invariant is enforced at runtime *somewhere*, but only on the paths
+the tests happen to exercise. This package enforces them *statically*, at
+CI time, over the whole tree:
+
+======  ==============================================================
+RL001   PRNG key reuse (same key consumed by two random ops / reused
+        across loop iterations without a split or fold_in)
+RL002   nondeterministic reduction on programmed paths (``jnp.sum`` /
+        ``jnp.dot`` in core PCM/engine/programming code that must route
+        through ``pcm.det_sum``)
+RL003   retrace hazards (jit wrapper created inside a loop; loop-varying
+        slice shapes or static args fed to a jitted callable)
+RL004   host-device sync inside serving hot loops (``.item()``,
+        ``device_get``, ``int()/float()/bool()/np.asarray`` on jitted-call
+        results inside ``serving/engine.py`` / ``serving/fleet.py`` loops)
+RL005   wall-clock / stdlib randomness in library code (``time.*``,
+        ``random.*``, ``datetime.now`` outside ``launch/``,
+        ``benchmarks/``, ``examples/``, ``tests/`` and the sanctioned
+        clock boundary ``repro/clock.py``)
+RL000   (meta) a ``repro-lint: disable`` comment without a justification
+======  ==============================================================
+
+Deliberate exceptions are annotated in place::
+
+    x = jnp.sum(v)  # repro-lint: disable=RL002 -- int32 limbs: modular add is associative
+
+The justification (after ``--``) is mandatory; a bare disable is itself a
+finding (RL000). ``# repro-lint: disable-file=RLxxx -- why`` suppresses a
+rule for a whole file.
+
+CLI (blocking in CI on ``src`` and ``tests``, advisory in the nightly on
+``benchmarks`` and ``examples``)::
+
+    python -m repro.analysis.lint src tests benchmarks examples
+"""
+
+from repro.analysis.lint.core import (  # noqa: F401
+    Check,
+    Finding,
+    all_checks,
+    lint_file,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.lint.report import format_json, format_text  # noqa: F401

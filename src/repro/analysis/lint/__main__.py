@@ -1,0 +1,5 @@
+"""``python -m repro.analysis.lint`` entry point."""
+
+from repro.analysis.lint.cli import main
+
+raise SystemExit(main())

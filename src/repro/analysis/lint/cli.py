@@ -1,0 +1,74 @@
+"""CLI driver: ``python -m repro.analysis.lint src tests [...]``.
+
+Exit codes: 0 clean, 1 findings, 2 usage/IO error. ``--format json`` for
+machine output, ``--rules RL001,RL005`` to run a subset, ``--list-rules``
+to print the registry.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional
+
+from repro.analysis.lint.core import all_checks, lint_paths
+from repro.analysis.lint.report import format_json, format_text
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="JAX-aware static analysis for repro's invariants",
+    )
+    p.add_argument(
+        "paths", nargs="*", help="files or directories to lint"
+    )
+    p.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="report format (default: text)",
+    )
+    p.add_argument(
+        "--rules", default=None, metavar="RL001,RL002",
+        help="comma-separated subset of rules to run (default: all)",
+    )
+    p.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule registry and exit",
+    )
+    return p
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    checks = all_checks()
+    if args.list_rules:
+        for c in checks:
+            print(f"{c.rule}  {c.name}: {c.description}")
+        return 0
+    if not args.paths:
+        build_parser().print_usage(sys.stderr)
+        print("error: no paths given", file=sys.stderr)
+        return 2
+    if args.rules is not None:
+        wanted = {r.strip() for r in args.rules.split(",") if r.strip()}
+        known = {c.rule for c in checks}
+        unknown = wanted - known
+        if unknown:
+            print(
+                f"error: unknown rule(s): {', '.join(sorted(unknown))}",
+                file=sys.stderr,
+            )
+            return 2
+        checks = [c for c in checks if c.rule in wanted]
+    try:
+        findings, n_files = lint_paths(args.paths, checks=checks)
+    except (FileNotFoundError, OSError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    fmt = format_json if args.format == "json" else format_text
+    print(fmt(findings, n_files))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via __main__
+    raise SystemExit(main())

@@ -1,0 +1,201 @@
+"""Analyzer core: findings, suppression comments, the check registry.
+
+A :class:`Check` is one rule (RL001, ...) over one parsed module. Checks
+are stdlib-``ast`` based -- the analyzer never imports the code it lints,
+so it cannot be confused by import-time side effects and runs the same
+on any host (no accelerator needed).
+
+Suppressions are per-line comments with a *mandatory* justification::
+
+    y = jnp.sum(limbs)  # repro-lint: disable=RL002 -- int32 modular add is associative
+
+A standalone suppression comment applies to the next source line (so long
+lines can carry their annotation above); a trailing comment applies to its
+own line. ``disable-file=`` in a comment suppresses the rule for the whole
+file. A disable without ``-- why`` is itself reported (RL000): the point
+of an annotated exception is the annotation.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Iterable, Optional
+
+#: suppression comment grammar: ``# repro-lint: disable=RL001,RL002 -- why``
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(?P<kind>disable-file|disable)\s*="
+    r"\s*(?P<rules>RL\d{3}(?:\s*,\s*RL\d{3})*)"
+    r"(?:\s*--\s*(?P<why>\S.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+class Check:
+    """Base class for one lint rule.
+
+    Subclasses set ``rule`` / ``name`` / ``description`` and implement
+    :meth:`run`. ``only_paths`` (fnmatch patterns over the posix path)
+    restricts a repo-specific rule to its sensitive files; ``skip_paths``
+    carves out sanctioned zones (e.g. RL005's launch/bench allowlist).
+    """
+
+    rule: str = "RL000"
+    name: str = "base"
+    description: str = ""
+    #: fnmatch patterns; empty = applies everywhere
+    only_paths: tuple[str, ...] = ()
+    #: fnmatch patterns; matching files are exempt from this rule
+    skip_paths: tuple[str, ...] = ()
+
+    def applies(self, path: str) -> bool:
+        from fnmatch import fnmatch
+
+        p = Path(path).as_posix()
+        if self.only_paths and not any(fnmatch(p, g) for g in self.only_paths):
+            return False
+        return not any(fnmatch(p, g) for g in self.skip_paths)
+
+    def run(self, tree: ast.AST, text: str, path: str) -> list[Finding]:
+        raise NotImplementedError
+
+
+def all_checks() -> list[Check]:
+    """Fresh instances of every registered rule, RL-number order."""
+    from repro.analysis.lint import rules
+
+    return [cls() for cls in rules.CHECKS]
+
+
+@dataclasses.dataclass
+class _Suppressions:
+    """Parsed suppression comments of one file."""
+
+    file_rules: set[str]
+    line_rules: dict[int, set[str]]
+    #: (line, col) of disables missing the mandatory justification
+    unjustified: list[tuple[int, int]]
+
+    def covers(self, rule: str, line: int) -> bool:
+        return rule in self.file_rules or rule in self.line_rules.get(
+            line, set()
+        )
+
+
+def _parse_suppressions(text: str) -> _Suppressions:
+    sup = _Suppressions(set(), {}, [])
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return sup
+    lines = text.splitlines()
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
+        if not m:
+            continue
+        line = tok.start[0]
+        if m.group("why") is None:
+            sup.unjustified.append((line, tok.start[1]))
+            continue
+        names = {r.strip() for r in m.group("rules").split(",")}
+        if m.group("kind") == "disable-file":
+            sup.file_rules |= names
+            continue
+        # standalone comment line -> guards the next line; trailing
+        # comment -> guards its own line
+        standalone = lines[line - 1].lstrip().startswith("#")
+        target = line + 1 if standalone else line
+        sup.line_rules.setdefault(target, set()).update(names)
+    return sup
+
+
+def lint_source(
+    text: str,
+    path: str = "<memory>",
+    checks: Optional[list[Check]] = None,
+    respect_suppressions: bool = True,
+) -> list[Finding]:
+    """Lint one source string; returns unsuppressed findings, sorted."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [
+            Finding(
+                "RL999", path, e.lineno or 1, (e.offset or 1) - 1,
+                f"syntax error: {e.msg}",
+            )
+        ]
+    sup = _parse_suppressions(text)
+    findings = [
+        Finding(
+            "RL000", path, line, col,
+            "suppression without a justification -- write "
+            "'# repro-lint: disable=RLxxx -- why'",
+        )
+        for line, col in sup.unjustified
+    ]
+    for check in checks if checks is not None else all_checks():
+        if not check.applies(path):
+            continue
+        findings.extend(check.run(tree, text, path))
+    if respect_suppressions:
+        findings = [
+            f
+            for f in findings
+            if f.rule == "RL000" or not sup.covers(f.rule, f.line)
+        ]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def lint_file(
+    path: str | Path, checks: Optional[list[Check]] = None
+) -> list[Finding]:
+    p = Path(path)
+    return lint_source(
+        p.read_text(encoding="utf-8"), p.as_posix(), checks=checks
+    )
+
+
+def iter_py_files(paths: Iterable[str | Path]) -> list[Path]:
+    """Expand files/directories into a sorted list of ``.py`` files."""
+    out: set[Path] = set()
+    for p in (Path(p) for p in paths):
+        if p.is_dir():
+            out.update(
+                f for f in p.rglob("*.py") if "__pycache__" not in f.parts
+            )
+        elif p.suffix == ".py":
+            out.add(p)
+        else:
+            raise FileNotFoundError(f"not a .py file or directory: {p}")
+    return sorted(out)
+
+
+def lint_paths(
+    paths: Iterable[str | Path], checks: Optional[list[Check]] = None
+) -> tuple[list[Finding], int]:
+    """Lint files/trees; returns (findings, number of files linted)."""
+    files = iter_py_files(paths)
+    findings: list[Finding] = []
+    for f in files:
+        findings.extend(lint_file(f, checks=checks))
+    return findings, len(files)

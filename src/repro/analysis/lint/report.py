@@ -1,0 +1,46 @@
+"""Reporters: text (one finding per line, grep-able) and JSON (machine)."""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable
+
+from repro.analysis.lint.core import Finding
+
+
+def format_text(findings: Iterable[Finding], n_files: int) -> str:
+    """GCC-style ``path:line:col: RULE message`` lines plus a summary."""
+    findings = list(findings)
+    lines = [f.format() for f in findings]
+    by_rule: dict[str, int] = {}
+    for f in findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    if findings:
+        breakdown = ", ".join(
+            f"{rule} x{n}" for rule, n in sorted(by_rule.items())
+        )
+        lines.append(
+            f"{len(findings)} finding(s) in {n_files} file(s) ({breakdown})"
+        )
+    else:
+        lines.append(f"clean: 0 findings in {n_files} file(s)")
+    return "\n".join(lines)
+
+
+def format_json(findings: Iterable[Finding], n_files: int) -> str:
+    """Stable JSON document: ``{files, findings: [{rule, path, ...}]}``."""
+    findings = list(findings)
+    doc = {
+        "files": n_files,
+        "findings": [
+            {
+                "rule": f.rule,
+                "path": f.path,
+                "line": f.line,
+                "col": f.col,
+                "message": f.message,
+            }
+            for f in findings
+        ],
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)

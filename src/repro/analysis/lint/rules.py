@@ -1,0 +1,628 @@
+"""The repo-specific rules (RL001-RL005).
+
+Every rule is purely syntactic (stdlib ``ast``). The analyses are scoped
+and conservative on purpose: each rule names the exact hazard it exists
+for (module docstring of ``repro.analysis.lint``), flags the constructs
+that realize it, and accepts annotated exceptions via
+``# repro-lint: disable=RLxxx -- why``. A static pass cannot prove the
+absence of these bugs -- it makes the *cheap-to-check* 95% impossible to
+commit silently, which is what a CI gate is for.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.lint.core import Check, Finding
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted(node: ast.AST) -> str:
+    """Dotted name of a Name/Attribute chain ('' when not a plain chain)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """Base Name of an expression chain (attribute/subscript/call peeled)."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    """True for ``jax.jit(...)`` / ``jit(...)`` / ``partial(jax.jit, ...)``."""
+    name = dotted(call.func)
+    if name in ("jax.jit", "jit", "pjit", "jax.pjit"):
+        return True
+    if name in ("functools.partial", "partial") and call.args:
+        return dotted(call.args[0]) in ("jax.jit", "jit", "pjit", "jax.pjit")
+    return False
+
+
+def _jit_has_static(call: ast.Call) -> bool:
+    return any(
+        kw.arg in ("static_argnums", "static_argnames")
+        for kw in call.keywords
+    )
+
+
+class JitIndex:
+    """Names/attributes bound to jitted callables anywhere in a module.
+
+    ``names``: plain variables (``f = jax.jit(step)``) and decorated
+    functions (``@jax.jit`` / ``@partial(jax.jit, ...)``). ``attrs``:
+    attribute basenames (``self._decode = jax.jit(...)``) -- matched by
+    basename at call sites (``eng._decode(...)``), which is deliberately
+    fuzzy: one class's jitted attribute flags every same-named call.
+    ``static``: the subset created with static_argnums/static_argnames.
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.names: set[str] = set()
+        self.attrs: set[str] = set()
+        self.static: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                value = node.value
+                targets = (
+                    node.targets
+                    if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                if isinstance(value, ast.Call) and _is_jit_call(value):
+                    for t in targets:
+                        if isinstance(t, ast.Name):
+                            self.names.add(t.id)
+                            if _jit_has_static(value):
+                                self.static.add(t.id)
+                        elif isinstance(t, ast.Attribute):
+                            self.attrs.add(t.attr)
+                            if _jit_has_static(value):
+                                self.static.add(t.attr)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if dotted(dec) in ("jax.jit", "jit"):
+                        self.names.add(node.name)
+                    elif isinstance(dec, ast.Call) and _is_jit_call(dec):
+                        self.names.add(node.name)
+                        if _jit_has_static(dec):
+                            self.static.add(node.name)
+
+    def is_jitted_call(self, call: ast.Call) -> Optional[str]:
+        """The jitted binding a call targets, or None."""
+        f = call.func
+        if isinstance(f, ast.Name) and f.id in self.names:
+            return f.id
+        if isinstance(f, ast.Attribute) and f.attr in self.attrs:
+            return f.attr
+        return None
+
+
+def _scopes(tree: ast.AST):
+    """Yield (scope_node, body) for the module and every function."""
+    yield tree, list(ast.iter_child_nodes(tree))
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.body
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+# ---------------------------------------------------------------------------
+# RL001: PRNG key reuse
+# ---------------------------------------------------------------------------
+
+#: jax.random callables that DERIVE keys (not draws -- never "consumption")
+_KEY_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "clone", "key_data",
+                 "wrap_key_data"}
+
+
+class RngKeyReuse(Check):
+    """RL001: one PRNG key consumed by two random draws.
+
+    A key bound from ``jax.random.PRNGKey/split/fold_in`` must feed exactly
+    one consumer. Consumption is (a) first argument of a ``jax.random``
+    sampler, or (b) being passed to any other call (helpers draw from keys
+    too) -- except ``split``/``fold_in``, which *derive* fresh keys.
+    A second consumption, or consumption inside a loop of a key defined
+    outside it, silently correlates draws -- exactly the cross-chip
+    correlation that would fake fleet agreement SLOs.
+
+    Mutually exclusive ``if``/``elif`` branches each get their own view of
+    the consumption state (at most one branch runs), and a ``for`` loop's
+    iterable executes once at loop entry, so neither is a reuse. Tests are
+    exempt by design: reusing a key there is the *assertion* (same key =>
+    same draw pins determinism), not a hazard.
+    """
+
+    rule = "RL001"
+    name = "rng-key-reuse"
+    description = "PRNG key consumed by more than one random draw"
+    skip_paths = ("tests/*", "*/tests/*")
+
+    def run(self, tree, text, path):
+        findings: list[Finding] = []
+        for scope, body in _scopes(tree):
+            if isinstance(scope, ast.Module):
+                continue  # keys at module scope are config, not draws
+            findings.extend(self._scan_scope(scope, path))
+        return findings
+
+    def _scan_scope(self, scope, path) -> list[Finding]:
+        findings: list[Finding] = []
+        # env: name -> (def_loop_depth, consumptions: list[(line, col)])
+        Env = dict
+
+        def is_key_expr(value: ast.AST) -> bool:
+            if not isinstance(value, ast.Call):
+                return False
+            name = dotted(value.func)
+            return name.startswith("jax.random.") and name.rsplit(".", 1)[
+                -1
+            ] in ("PRNGKey", "split", "fold_in", "key", "clone")
+
+        def consume(env: Env, name: str, node: ast.AST, depth: int) -> None:
+            if name not in env:
+                return
+            def_depth, uses = env[name]
+            line, col = node.lineno, node.col_offset
+            if uses:
+                findings.append(
+                    Finding(
+                        self.rule, path, line, col,
+                        f"PRNG key '{name}' already consumed at line "
+                        f"{uses[0][0]} -- split or fold_in before drawing "
+                        "again (reused keys correlate draws)",
+                    )
+                )
+            elif depth > def_depth:
+                findings.append(
+                    Finding(
+                        self.rule, path, line, col,
+                        f"PRNG key '{name}' (defined outside this loop) is "
+                        "consumed inside it -- every iteration reuses the "
+                        "same draw; fold_in the loop index first",
+                    )
+                )
+            uses.append((line, col))
+
+        def fork(env: Env) -> Env:
+            return {k: (d, list(u)) for k, (d, u) in env.items()}
+
+        def merge(env: Env, branches: list[Env]) -> None:
+            # at most one branch ran: a key's post-state is the union of
+            # the branch states (so a LATER consume still flags), but
+            # cross-branch pairs never flag against each other
+            env.clear()
+            for b in branches:
+                for name, (d, uses) in b.items():
+                    if name not in env:
+                        env[name] = (d, list(uses))
+                    else:
+                        seen = env[name][1]
+                        seen.extend(u for u in uses if u not in seen)
+
+        def visit(node: ast.AST, depth: int, env: Env) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not scope:
+                return  # nested scopes analyzed on their own
+            if isinstance(node, ast.Assign) and is_key_expr(node.value):
+                visit(node.value, depth, env)  # RHS may consume an old key
+                for t in node.targets:
+                    for n in (
+                        t.elts if isinstance(t, (ast.Tuple, ast.List))
+                        else [t]
+                    ):
+                        if isinstance(n, ast.Name):
+                            env[n.id] = (depth, [])
+                return
+            if isinstance(node, ast.If):
+                visit(node.test, depth, env)
+                branches = []
+                for body in (node.body, node.orelse):
+                    b = fork(env)
+                    for stmt in body:
+                        visit(stmt, depth, b)
+                    # a branch that leaves the scope (return/raise/...)
+                    # contributes nothing to the fall-through state
+                    if not any(
+                        isinstance(
+                            s, (ast.Return, ast.Raise, ast.Continue,
+                                ast.Break)
+                        )
+                        for s in body
+                    ):
+                        branches.append(b)
+                merge(env, branches)
+                return
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                # iter/target evaluate once at loop entry, not per tick
+                visit(node.iter, depth, env)
+                for stmt in node.body + node.orelse:
+                    visit(stmt, depth + 1, env)
+                return
+            if isinstance(node, ast.Call):
+                callee = dotted(node.func)
+                leaf = callee.rsplit(".", 1)[-1]
+                derives = (
+                    callee.startswith("jax.random.")
+                    and leaf in _KEY_DERIVERS
+                ) or leaf in ("fold_in", "split")
+                if not derives:
+                    for arg in list(node.args) + [
+                        kw.value for kw in node.keywords
+                    ]:
+                        if isinstance(arg, ast.Name):
+                            consume(env, arg.id, arg, depth)
+                        else:
+                            visit(arg, depth, env)
+                    visit(node.func, depth, env)
+                    return
+            bump = isinstance(node, ast.While)
+            for child in ast.iter_child_nodes(node):
+                visit(child, depth + 1 if bump else depth, env)
+
+        env: Env = {}
+        for stmt in (
+            scope.body if hasattr(scope, "body") else []
+        ):
+            visit(stmt, 0, env)
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# RL002: nondeterministic reductions on programmed paths
+# ---------------------------------------------------------------------------
+
+
+class NondetReduction(Check):
+    """RL002: float reductions where bit-exactness is contractual.
+
+    ``core/pcm.py`` / ``core/engine.py`` / ``core/programming.py`` compute
+    the GDC scalars and programmed state that every fleet replica must
+    agree on *bitwise*. Float ``jnp.sum``/``jnp.dot`` are reduction-order
+    dependent (sharding/fusion change the bits); these files must route
+    through ``pcm.det_sum`` (fixed-point limbs, associative by
+    construction) or carry an annotated exception.
+    """
+
+    rule = "RL002"
+    name = "nondet-reduction"
+    description = "order-dependent reduction on a bit-exactness-critical path"
+    only_paths = (
+        "*core/pcm.py",
+        "*core/engine.py",
+        "*core/programming.py",
+    )
+
+    _BAD = ("jnp.sum", "jnp.dot", "jnp.nansum", "jnp.vdot", "jnp.inner",
+            "jax.numpy.sum", "jax.numpy.dot")
+
+    def run(self, tree, text, path):
+        findings = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and dotted(node.func) in self._BAD:
+                findings.append(
+                    Finding(
+                        self.rule, path, node.lineno, node.col_offset,
+                        f"{dotted(node.func)} is reduction-order dependent "
+                        "on a programmed path -- route through pcm.det_sum "
+                        "(or annotate why the bits cannot leak into "
+                        "program state)",
+                    )
+                )
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# RL003: retrace hazards
+# ---------------------------------------------------------------------------
+
+
+class RetraceHazard(Check):
+    """RL003: constructs that silently multiply jit traces.
+
+    Flags, inside ``for``/``while`` bodies:
+
+    * building a jit wrapper in the loop (``jax.jit(f)`` / ``@partial``
+      equivalents) -- a fresh callable has a fresh cache, so every
+      iteration retraces;
+    * calling a known-jitted callable with a *slice bounded by the loop
+      variable* (``x[:i]``) -- one shape per iteration, one trace per
+      shape (the bucketed-prefill invariant is one trace per bucket);
+    * calling a known-jitted callable that was created with
+      ``static_argnums``/``static_argnames`` and passing the loop variable
+      -- every distinct static value is a new trace.
+    """
+
+    rule = "RL003"
+    name = "retrace-hazard"
+    description = "jit retrace hazard inside a Python loop"
+
+    def run(self, tree, text, path):
+        findings: list[Finding] = []
+        jit = JitIndex(tree)
+
+        def loop_vars(loop) -> set[str]:
+            if isinstance(loop, (ast.For, ast.AsyncFor)):
+                return _names_in(loop.target)
+            return set()  # while: no induction variable to track
+
+        def scan_loop(loop, lvars: set[str]) -> None:
+            lvars = lvars | loop_vars(loop)
+            for node in ast.walk(loop):
+                if node is loop:
+                    continue
+                if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+                    # nested loops rescanned with their own vars added
+                    continue
+                if not isinstance(node, ast.Call):
+                    continue
+                if _is_jit_call(node):
+                    findings.append(
+                        Finding(
+                            self.rule, path, node.lineno, node.col_offset,
+                            "jit wrapper created inside a loop -- a fresh "
+                            "wrapper has an empty trace cache, so every "
+                            "iteration retraces; hoist the jax.jit out of "
+                            "the loop",
+                        )
+                    )
+                    continue
+                target = jit.is_jitted_call(node)
+                if target is None:
+                    continue
+                args = list(node.args) + [kw.value for kw in node.keywords]
+                for arg in args:
+                    for sub in ast.walk(arg):
+                        if (
+                            isinstance(sub, ast.Subscript)
+                            and isinstance(sub.slice, ast.Slice)
+                            and (
+                                _names_in(sub.slice) & lvars
+                            )
+                        ):
+                            findings.append(
+                                Finding(
+                                    self.rule, path,
+                                    node.lineno, node.col_offset,
+                                    f"jitted '{target}' called with a "
+                                    "loop-varying slice -- one shape (and "
+                                    "one trace) per iteration; pad to a "
+                                    "bucketed shape instead",
+                                )
+                            )
+                            break
+                if target in jit.static:
+                    for arg in args:
+                        if _names_in(arg) & lvars:
+                            findings.append(
+                                Finding(
+                                    self.rule, path,
+                                    node.lineno, node.col_offset,
+                                    f"jitted '{target}' has static args "
+                                    "and is called with the loop variable "
+                                    "-- every distinct value is a new "
+                                    "trace",
+                                )
+                            )
+                            break
+
+        def walk(node, lvars: set[str]):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.For, ast.AsyncFor, ast.While)):
+                    scan_loop(child, lvars)
+                    walk(child, lvars | loop_vars(child))
+                else:
+                    walk(child, lvars)
+
+        walk(tree, set())
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# RL004: host-device sync in serving hot loops
+# ---------------------------------------------------------------------------
+
+
+class HotLoopSync(Check):
+    """RL004: blocking host syncs inside the serving tick loops.
+
+    In ``serving/engine.py`` / ``serving/fleet.py``, flags -- inside loop
+    bodies -- ``.item()``, ``jax.device_get``, and ``int()/float()/bool()/
+    np.asarray()`` applied to values produced by this module's jitted
+    closures. Each one stalls the decode pipeline for a device round-trip;
+    the engine's contract is ONE sync per decode step (the
+    ``np.asarray(nxt)`` after the jitted step), everything after it is
+    host-side numpy. Unavoidable per-admission syncs carry annotations.
+    """
+
+    rule = "RL004"
+    name = "hot-loop-sync"
+    description = "host-device sync inside a serving hot loop"
+    only_paths = ("*serving/engine.py", "*serving/fleet.py")
+
+    _CASTS = ("int", "float", "bool")
+    _SYNC_CALLS = ("np.asarray", "numpy.asarray", "jax.device_get",
+                   "np.array", "numpy.array")
+
+    def run(self, tree, text, path):
+        findings: list[Finding] = []
+        jit = JitIndex(tree)
+
+        for scope, body in _scopes(tree):
+            if isinstance(scope, ast.Module):
+                continue
+            # names bound (anywhere in the scope) from jitted-call results
+            # vs from host numpy -- a cast of a numpy-rooted name is free
+            jit_rooted: set[str] = set()
+            np_rooted: set[str] = set()
+            for node in ast.walk(scope):
+                if not isinstance(node, ast.Assign):
+                    continue
+                value = node.value
+                rooted = None
+                if isinstance(value, ast.Call):
+                    if jit.is_jitted_call(value):
+                        rooted = jit_rooted
+                    elif dotted(value.func) in self._SYNC_CALLS:
+                        rooted = np_rooted
+                if rooted is None:
+                    continue
+                for t in node.targets:
+                    for n in (
+                        t.elts if isinstance(t, (ast.Tuple, ast.List))
+                        else [t]
+                    ):
+                        if isinstance(n, ast.Name):
+                            rooted.add(n.id)
+            jit_rooted -= np_rooted
+
+            for loop in ast.walk(scope):
+                if not isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+                    continue
+                for node in ast.walk(loop):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    callee = dotted(node.func)
+                    if (
+                        isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item"
+                    ):
+                        findings.append(self._f(path, node, ".item()"))
+                    elif callee == "jax.device_get":
+                        findings.append(self._f(path, node, callee))
+                    elif (
+                        callee in self._CASTS
+                        or callee in self._SYNC_CALLS
+                    ) and node.args:
+                        root = root_name(node.args[0])
+                        if root in jit_rooted:
+                            findings.append(
+                                self._f(
+                                    path, node,
+                                    f"{callee}() on jitted result '{root}'",
+                                )
+                            )
+        # dedup: nested loop walks can visit one call twice
+        return list(dict.fromkeys(findings))
+
+    def _f(self, path, node, what) -> Finding:
+        return Finding(
+            self.rule, path, node.lineno, node.col_offset,
+            f"{what} blocks on the device inside a serving hot loop -- "
+            "batch the sync outside the loop (one np.asarray per decode "
+            "step) or annotate why this sync is unavoidable",
+        )
+
+
+# ---------------------------------------------------------------------------
+# RL005: wall-clock / stdlib randomness in library code
+# ---------------------------------------------------------------------------
+
+
+class WallClockInLibrary(Check):
+    """RL005: nondeterminism sources outside the sanctioned zones.
+
+    Library code (everything under ``src/repro`` except ``launch/`` and
+    the sanctioned clock boundary ``repro/clock.py``) must be
+    deterministic given its inputs: the fleet tests replay serving runs
+    under virtual clocks, and stdlib ``random``/wall-clock calls break
+    that replay silently. CLIs (``launch/``), benchmarks, examples and
+    tests measure real time legitimately and are exempt.
+    """
+
+    rule = "RL005"
+    name = "wall-clock-in-library"
+    description = "wall clock or stdlib randomness in deterministic library code"
+    skip_paths = (
+        "*launch/*",
+        "benchmarks/*", "*/benchmarks/*",
+        "examples/*", "*/examples/*",
+        "tests/*", "*/tests/*",
+        # THE clock boundary: every serving/training consumer injects a
+        # repro.clock.Clock; SystemClock is where the wall clock lives.
+        "*repro/clock.py",
+    )
+
+    _TIME_ATTRS = ("time", "monotonic", "perf_counter", "time_ns",
+                   "monotonic_ns", "perf_counter_ns", "sleep")
+    _DT_ATTRS = ("now", "utcnow", "today")
+
+    def run(self, tree, text, path):
+        findings: list[Finding] = []
+        # which nondeterminism modules this file actually imports, under
+        # which local names ('time' -> {'time', '_time'}, ...)
+        aliases: dict[str, set[str]] = {"time": set(), "random": set(),
+                                        "datetime": set()}
+        from_imports: dict[str, str] = {}  # local name -> "module.attr"
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    mod = a.name.split(".")[0]
+                    if mod in aliases:
+                        aliases[mod].add(a.asname or mod)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mod = node.module.split(".")[0]
+                if mod in aliases:
+                    for a in node.names:
+                        from_imports[a.asname or a.name] = (
+                            f"{mod}.{a.name}"
+                        )
+
+        def flag(node, what):
+            findings.append(
+                Finding(
+                    self.rule, path, node.lineno, node.col_offset,
+                    f"{what} in library code -- inject a repro.clock.Clock "
+                    "(or an explicit RNG) so deterministic-clock tests can "
+                    "replay this path",
+                )
+            )
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) and isinstance(
+                node.value, ast.Name
+            ):
+                base, attr = node.value.id, node.attr
+                if base in aliases["time"] and attr in self._TIME_ATTRS:
+                    flag(node, f"time.{attr}")
+                elif base in aliases["random"]:
+                    flag(node, f"random.{attr}")
+                elif base in aliases["datetime"] and attr in self._DT_ATTRS:
+                    flag(node, f"datetime.{attr}")
+            elif isinstance(node, ast.Attribute) and dotted(node) and (
+                dotted(node).startswith("datetime.datetime.")
+            ):
+                if node.attr in self._DT_ATTRS and aliases["datetime"]:
+                    flag(node, dotted(node))
+            elif isinstance(node, ast.Name) and node.id in from_imports:
+                target = from_imports[node.id]
+                mod, attr = target.split(".", 1)
+                if (mod == "time" and attr in self._TIME_ATTRS) or (
+                    mod == "random"
+                ) or (mod == "datetime" and attr in self._DT_ATTRS):
+                    flag(node, target)
+        return list(dict.fromkeys(findings))
+
+
+CHECKS = [
+    RngKeyReuse,
+    NondetReduction,
+    RetraceHazard,
+    HotLoopSync,
+    WallClockInLibrary,
+]

@@ -189,8 +189,13 @@ def read(
 
 
 def gdc_scale(g_target: Array, g_now: Array) -> Array:
-    """Global drift compensation factor: sum(G_T)/sum(G_now) (one scalar)."""
-    return jnp.sum(g_target) / (jnp.sum(g_now) + 1e-12)
+    """Global drift compensation factor: sum(G_T)/sum(G_now) (one scalar).
+
+    Both sums route through :func:`det_sum` so the per-call simulation
+    path computes the same bits as the programmed-chip path in
+    ``core/engine.py`` under any sharding or reduction order.
+    """
+    return det_sum(g_target) / (det_sum(g_now) + 1e-12)
 
 
 DET_SUM_SCALE = float(1 << 20)  # fixed-point grid for deterministic sums
@@ -218,7 +223,8 @@ def det_sum(g: Array) -> Array:
     v = jnp.round(g * DET_SUM_SCALE).astype(jnp.int32)
     total = jnp.zeros((), jnp.float32)
     for shift in range(0, 24, 4):
-        limb_sum = jnp.sum((v >> shift) & 0xF)  # int32: order-independent
+        # repro-lint: disable=RL002 -- int32 limbs: modular add is associative, this IS det_sum
+        limb_sum = jnp.sum((v >> shift) & 0xF)
         total = total + limb_sum.astype(jnp.float32) * float(2**shift)
     return total / DET_SUM_SCALE
 

@@ -371,7 +371,9 @@ def main() -> None:
         )
 
     key = jax.random.PRNGKey(0)
-    params = lm.lm_init(key, cfg)
+    # one consumer per subkey: weight init, patch/token data, engine rng
+    k_init, k_data, k_rng = jax.random.split(key, 3)
+    params = lm.lm_init(k_init, cfg)
     # pre-programming weights: the digital reference for the accuracy
     # counters AND the source the refresh policy reprograms the chip from
     src_params = ref_params = params
@@ -448,7 +450,7 @@ def main() -> None:
     if cfg.frontend == "vision_patches":
         # independent per-request images (sliced per rid below)
         patches = jax.random.normal(
-            key, (b, cfg.num_patches, cfg.d_model), cfg.dtype
+            k_data, (b, cfg.num_patches, cfg.d_model), cfg.dtype
         )
         s_max += cfg.num_patches
 
@@ -474,7 +476,7 @@ def main() -> None:
         served = ServingEngine(
             cfg, acfg, params, serving_cfg, program=program,
             ref_params=ref_params if ref_check else None,
-            src_params=src_params, mesh=mesh, rng=key,
+            src_params=src_params, mesh=mesh, rng=k_rng,
         )
 
     def fmt_timing(m):
@@ -584,7 +586,7 @@ def main() -> None:
         return
 
     def rectangle_requests():
-        toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+        toks = jax.random.randint(k_data, (b, s), 0, cfg.vocab)
         return [
             Request(
                 rid=i, prompt=np.asarray(toks[i]),

@@ -20,7 +20,6 @@ one compiled program and drives the prefill/decode lifecycle itself;
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax

@@ -16,10 +16,8 @@ import argparse
 import json
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
-from repro.core.analog import AnalogConfig
 from repro.data.pipeline import PipelineConfig, iterate
 from repro.models import analognet, lm
 from repro.training.loop import TrainConfig, run_two_stage

@@ -23,7 +23,6 @@ noise/quant path sees exactly the tensors the hardware would.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,6 @@ work inside the decode loop. See launch/serve.py.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

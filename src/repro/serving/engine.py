@@ -61,7 +61,6 @@ while it serves.
 from __future__ import annotations
 
 import dataclasses
-import time
 import warnings
 from collections import deque
 from typing import Any, Optional
@@ -70,6 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import clock as clock_lib
 from repro.core import engine as engine_mod
 from repro.core.analog import AnalogConfig
 from repro.core.engine import CiMProgram, DriftSchedule
@@ -541,6 +541,7 @@ class ServingEngine:
         *,
         scheduler: Any = None,
         drift_policy: Optional[DriftPolicy] = None,
+        clock: Optional[clock_lib.Clock] = None,
         now_fn=None,
         sleep_fn=None,
         max_steps: Optional[int] = None,
@@ -550,8 +551,9 @@ class ServingEngine:
         compiled) closures.
 
         Each run re-initializes the slot caches, so runs are independent.
-        ``now_fn``/``sleep_fn`` default to the wall clock; tests inject a
-        virtual clock through them. ``track_events=False`` delegates the
+        Time enters only through ``clock`` (default: the system clock;
+        tests inject a :class:`repro.clock.VirtualClock`); ``now_fn``/
+        ``sleep_fn`` override individual methods of it. ``track_events=False`` delegates the
         program-event accounting to an outer owner (the fleet router owns
         it fleet-wide: with several engines sharing the global counter,
         per-run deltas would see sibling chips' refreshes).
@@ -560,8 +562,8 @@ class ServingEngine:
             self,
             scheduler=scheduler or ContinuousScheduler(),
             drift_policy=drift_policy,
-            now_fn=now_fn or time.monotonic,
-            sleep_fn=sleep_fn or time.sleep,
+            now_fn=now_fn or (clock or clock_lib.SYSTEM).now,
+            sleep_fn=sleep_fn or (clock or clock_lib.SYSTEM).sleep,
             max_steps=max_steps,
             track_events=track_events,
         )
@@ -572,13 +574,14 @@ class ServingEngine:
         *,
         scheduler: Any = None,
         drift_policy: Optional[DriftPolicy] = None,
+        clock: Optional[clock_lib.Clock] = None,
         now_fn=None,
         sleep_fn=None,
         max_steps: Optional[int] = None,
     ) -> ServeReport:
         """Serve ``requests`` to completion and return the run's report."""
         run = self.start_run(
-            scheduler=scheduler, drift_policy=drift_policy,
+            scheduler=scheduler, drift_policy=drift_policy, clock=clock,
             now_fn=now_fn, sleep_fn=sleep_fn, max_steps=max_steps,
         )
         run.submit(requests)
@@ -809,6 +812,7 @@ class EngineRun:
                 self._count_decision(logits0, r_logits, 0)
             self.t_prefill += self.now_fn() - t0
             self.slots[slot] = _Slot(
+                # repro-lint: disable=RL004 -- one sync per ADMISSION (not per decode tick): the first token must reach the host record
                 req, [int(tok0[0])], self.steps, self.now_fn() - self.t_start
             )
             self.maybe_retire(slot)
@@ -877,6 +881,7 @@ class EngineRun:
                     )
                     self._count_decision(logitsv[j : j + 1], r_logits, 0)
                 self.slots[slot] = _Slot(
+                    # repro-lint: disable=RL004 -- one sync per ADMISSION (bucketed prefill), amortized over the request's whole decode
                     req, [int(tokv[j])], self.steps,
                     self.now_fn() - self.t_start,
                     pages=pages, reserve_left=need - nbp_real,

@@ -51,6 +51,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro import clock as clock_lib
 from repro.core import engine as engine_mod
 from repro.core.engine import CiMProgram
 from repro.models.common import ModelConfig
@@ -295,6 +296,7 @@ class FleetRouter:
         scheduler: Any = None,
         drift_policies: Optional[list[Optional[DriftPolicy]]] = None,
         force_refresh: Optional[dict[int, int]] = None,
+        clock: Optional[clock_lib.Clock] = None,
         now_fn=None,
         sleep_fn=None,
         max_ticks: Optional[int] = None,
@@ -310,12 +312,10 @@ class FleetRouter:
         router tick -> chip index to drain at that tick regardless of
         agreement (the chaos hook the kill-a-chip tests use).
         """
-        import time as _time
-
         cfg = self.fleet_cfg
         n = cfg.n_chips
-        now_fn = now_fn or _time.monotonic
-        sleep_fn = sleep_fn or _time.sleep
+        now_fn = now_fn or (clock or clock_lib.SYSTEM).now
+        sleep_fn = sleep_fn or (clock or clock_lib.SYSTEM).sleep
         force_refresh = dict(force_refresh or {})
 
         if drift_policies is None:

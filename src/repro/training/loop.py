@@ -18,12 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 import signal
-import time
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import clock as clock_lib
 from repro.checkpoint import store
 from repro.core.analog import AnalogConfig
 from repro.core.analog import refresh_clip_ranges
@@ -52,8 +52,11 @@ def run_two_stage(
     *,
     opt_kind: str = "adamw",
     on_metrics: Optional[Callable[[int, dict], None]] = None,
+    clock: Optional[clock_lib.Clock] = None,
 ):
-    """Returns (params, history). Resumes from the latest checkpoint if any."""
+    """Returns (params, history). Resumes from the latest checkpoint if
+    any. ``clock`` injects the time source for the ``wall_s`` metric
+    (deterministic-clock tests replay training logs exactly)."""
     preempted = {"flag": False}
 
     def _sigterm(_sig, _frm):
@@ -110,8 +113,9 @@ def run_two_stage(
     opt_state = optim_lib.init(opt1, params)
     stage = 1
 
+    clk = clock or clock_lib.SYSTEM
     it = iter(batches)
-    t0 = time.time()
+    t0 = clk.now()
     for i in range(start, total):
         if i == tcfg.stage1_steps:
             # stage boundary: freeze clip ranges, reset optimizer, enable
@@ -130,7 +134,7 @@ def run_two_stage(
         )
         if i % tcfg.log_every == 0 or i == total - 1:
             m = {k: float(v) for k, v in metrics.items()}
-            m.update(step=i, stage=stage, wall_s=round(time.time() - t0, 1))
+            m.update(step=i, stage=stage, wall_s=round(clk.now() - t0, 1))
             history.append(m)
             if on_metrics:
                 on_metrics(i, m)

@@ -1,3 +1,4 @@
+import contextlib
 import os
 
 # Tests must see the single real CPU device (the 512-device override is
@@ -5,5 +6,53 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+# --------------------------------------------------------------- retraces
+#
+# One listener, registered once per process (jax.monitoring has no
+# unregister), counting XLA compilations: the backend_compile event fires
+# exactly once per new trace/compile and never on a jit cache hit.
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_compile_count = [0]
+
+
+def _count_compiles(key: str, _duration: float, **_kw) -> None:
+    if key == _COMPILE_EVENT:
+        _compile_count[0] += 1
+
+
+jax.monitoring.register_event_duration_secs_listener(_count_compiles)
+
+
+@pytest.fixture
+def assert_max_retraces():
+    """Context manager factory pinning the jit-compile count of a block.
+
+    Counts every XLA compilation (eager ops included -- they compile
+    too), so warm the code path first and assert on the *re-run*::
+
+        rep = engine.run(trace)          # warm: traces once per bucket
+        with assert_max_retraces(0):
+            engine.run(trace)            # same shapes: zero new traces
+
+    This is the dynamic side of lint rule RL003: the linter proves no
+    retrace *hazard* is written down, this fixture proves no retrace
+    actually *happens*.
+    """
+
+    @contextlib.contextmanager
+    def _bound(n_max: int):
+        before = _compile_count[0]
+        yield
+        n_new = _compile_count[0] - before
+        assert n_new <= n_max, (
+            f"{n_new} new jit compilation(s) in a block that allows "
+            f"{n_max} -- a retrace crept into a warmed path (loop-varying "
+            "shape or static arg?)"
+        )
+
+    return _bound

@@ -13,7 +13,6 @@ from repro.core import engine
 from repro.core.analog import (
     AnalogConfig,
     AnalogCtx,
-    analog_matmul,
     linear_apply,
     linear_init,
 )

@@ -29,9 +29,9 @@ import pytest
 try:
     import hypothesis
     import hypothesis.strategies as st
-    from hypothesis import given, settings
+    from hypothesis import given
 except ImportError:  # minimal CI images: run a fixed example grid instead
-    from _hypothesis_fallback import given, hypothesis, settings
+    from _hypothesis_fallback import given, hypothesis
     from _hypothesis_fallback import strategies as st
 
 from repro.core import pcm, quant

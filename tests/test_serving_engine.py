@@ -456,7 +456,8 @@ def test_paged_drift_lifecycle_composition(dense_cfg, dense_params):
     assert paged.program.t_seconds == 86400.0
 
 
-def test_paged_prefill_traces_bounded_by_buckets(dense_cfg, dense_params):
+def test_paged_prefill_traces_bounded_by_buckets(dense_cfg, dense_params,
+                                                 assert_max_retraces):
     """Satellite: many distinct prompt lengths compile one prefill trace
     per BUCKET in paged mode, but one per LENGTH in exact-length mode."""
     lens = tuple(range(5, 17))  # 12 distinct lengths
@@ -471,6 +472,10 @@ def test_paged_prefill_traces_bounded_by_buckets(dense_cfg, dense_params):
     )
     rep_p = paged.run(list(reqs), scheduler=BucketedScheduler())
     assert rep_p.n_prefill_traces <= len(paged.prefill_buckets)
+    # dynamic pin of the RL003 invariant: a second identical run over the
+    # warmed buckets must not compile anything new
+    with assert_max_retraces(0):
+        paged.run(list(reqs), scheduler=BucketedScheduler())
     rect = ServingEngine(
         dense_cfg, DIGITAL, dense_params, ServingConfig(n_slots=2, s_max=S_MAX)
     )

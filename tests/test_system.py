@@ -3,7 +3,6 @@ framework's LM generalization), at CPU scale."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from benchmarks import common

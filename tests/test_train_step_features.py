@@ -25,6 +25,7 @@ def test_grad_accumulation_matches_full_batch():
     outs = {}
     for accum in (1, 4):
         step = make_train_step(cfg, AnalogConfig(), opt_cfg, accum_steps=accum)
+        # repro-lint: disable=RL003 -- each iteration jits a DIFFERENT step fn (accum variants); 2 traces intended
         p, o, m = jax.jit(step)(
             params, optim_lib.init(opt_cfg, params), batch, key)
         outs[accum] = (p, float(m["loss"]))
