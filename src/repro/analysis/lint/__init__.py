@@ -35,6 +35,11 @@ RL005   wall-clock / stdlib randomness in library code (``time.*``,
         ``random.*``, ``datetime.now`` outside ``launch/``,
         ``benchmarks/``, ``examples/``, ``tests/`` and the sanctioned
         clock boundary ``repro/clock.py``)
+RL006   unguarded ``EngineRun`` mutation in threaded code (in modules
+        importing ``threading``, tick mutators -- ``admit_arrived`` /
+        ``decode_step`` / ``evict`` / ``refresh_chip`` -- called outside
+        the owning ``*Worker*`` class or an explicit ``with`` guard:
+        the async fleet's actor discipline, enforced statically)
 RL000   (meta) a ``repro-lint: disable`` comment without a justification
 ======  ==============================================================
 

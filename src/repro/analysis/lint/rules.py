@@ -1,4 +1,4 @@
-"""The repo-specific rules (RL001-RL005).
+"""The repo-specific rules (RL001-RL006).
 
 Every rule is purely syntactic (stdlib ``ast``). The analyses are scoped
 and conservative on purpose: each rule names the exact hazard it exists
@@ -453,7 +453,11 @@ class HotLoopSync(Check):
     rule = "RL004"
     name = "hot-loop-sync"
     description = "host-device sync inside a serving hot loop"
-    only_paths = ("*serving/engine.py", "*serving/fleet.py")
+    only_paths = (
+        "*serving/engine.py",
+        "*serving/fleet.py",
+        "*serving/async_fleet.py",
+    )
 
     _CASTS = ("int", "float", "bool")
     _SYNC_CALLS = ("np.asarray", "numpy.asarray", "jax.device_get",
@@ -619,10 +623,86 @@ class WallClockInLibrary(Check):
         return list(dict.fromkeys(findings))
 
 
+# ---------------------------------------------------------------------------
+# RL006: EngineRun mutation from outside its owning worker
+# ---------------------------------------------------------------------------
+
+
+class ThreadedEngineMutation(Check):
+    """RL006: unguarded ``EngineRun`` mutation in threaded code.
+
+    ``EngineRun`` is not internally synchronized; the async fleet's
+    concurrency discipline is actor-style -- every run is owned by
+    exactly one worker thread, and everyone else (the coordinator, the
+    submit path) reaches it through that worker's command queue. In any
+    module that imports ``threading``, a direct call to one of the run's
+    tick mutators (``admit_arrived`` / ``decode_step`` / ``evict`` /
+    ``refresh_chip``) outside a ``*Worker*`` class -- or a ``with``
+    block holding an explicit guard -- is exactly the data race the
+    discipline exists to prevent: two threads interleaving admissions
+    and decode steps on one slot table. Purely syntactic, like every
+    rule here: the owner exemption is lexical (the worker class owns the
+    mutation), the ``with`` exemption accepts an explicit lock scope.
+    """
+
+    rule = "RL006"
+    name = "threaded-engine-mutation"
+    description = "EngineRun mutated outside its owning worker thread"
+
+    _MUTATORS = ("admit_arrived", "decode_step", "evict", "refresh_chip")
+
+    def run(self, tree, text, path):
+        imports_threading = any(
+            (
+                isinstance(n, ast.Import)
+                and any(
+                    a.name.split(".")[0] == "threading" for a in n.names
+                )
+            )
+            or (
+                isinstance(n, ast.ImportFrom)
+                and (n.module or "").split(".")[0] == "threading"
+            )
+            for n in ast.walk(tree)
+        )
+        if not imports_threading:
+            return []
+
+        findings: list[Finding] = []
+
+        def visit(node: ast.AST, owned: bool) -> None:
+            if isinstance(node, ast.ClassDef) and "Worker" in node.name:
+                owned = True
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                owned = True
+            if (
+                not owned
+                and isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in self._MUTATORS
+            ):
+                findings.append(
+                    Finding(
+                        self.rule, path, node.lineno, node.col_offset,
+                        f".{node.func.attr}() mutates an EngineRun from "
+                        "code that does not own it -- in a threaded "
+                        "module, route tick mutations through the owning "
+                        "worker's command queue (or hold the guarding "
+                        "lock in a with block)",
+                    )
+                )
+            for child in ast.iter_child_nodes(node):
+                visit(child, owned)
+
+        visit(tree, False)
+        return findings
+
+
 CHECKS = [
     RngKeyReuse,
     NondetReduction,
     RetraceHazard,
     HotLoopSync,
     WallClockInLibrary,
+    ThreadedEngineMutation,
 ]

@@ -15,6 +15,7 @@ jumps time forward without blocking.
 
 from __future__ import annotations
 
+import threading
 import time  # repro-lint: disable-file=RL005 -- this module IS the sanctioned clock boundary
 
 
@@ -46,6 +47,12 @@ class VirtualClock(Clock):
     by ``max(dt, min_sleep)`` without blocking. Two runs over the same
     request trace observe identical timestamps, so latency assertions are
     exact instead of flaky.
+
+    ``now()``/``sleep()`` are individually atomic (the read-modify-write
+    of ``t`` is lock-protected), so a virtual clock accidentally shared
+    across threads cannot lose ticks. Determinism still requires a single
+    driving thread -- that is the async fleet's ``deterministic=True``
+    mode, not a property the lock can provide.
     """
 
     def __init__(
@@ -55,13 +62,16 @@ class VirtualClock(Clock):
         self.tick = tick
         self.min_sleep = min_sleep
         self.t = start
+        self._lock = threading.Lock()
 
     def now(self) -> float:
-        self.t += self.tick
-        return self.t
+        with self._lock:
+            self.t += self.tick
+            return self.t
 
     def sleep(self, dt: float) -> None:
-        self.t += max(dt, self.min_sleep)
+        with self._lock:
+            self.t += max(dt, self.min_sleep)
 
 
 #: process-wide default; the only place library code touches real time

@@ -62,7 +62,10 @@ fleet is N replicas of the saved draw instead). ``--agreement-slo X`` arms
 SLO-aware dispatch: arrived requests go to the least-loaded chip whose
 recent top-1 agreement clears X, and the report records the worst
 aggregate-agreement window. ``--fleet 1`` is byte-identical to not passing
-``--fleet`` at all (it routes through the single-engine path).
+``--fleet`` at all (it routes through the single-engine path). ``--async``
+serves the same fleet through the threaded front end (one worker thread
+per chip, overlapped jitted decode, bounded admission via ``--queue-cap``)
+and prints a greppable ``async fleet:`` throughput line.
 """
 
 from __future__ import annotations
@@ -85,6 +88,8 @@ from repro.launch import mesh as mesh_lib
 from repro.launch import steps
 from repro.models import lm
 from repro.serving import (
+    AsyncConfig,
+    AsyncFleetRouter,
     BucketedScheduler,
     DriftPolicy,
     FleetConfig,
@@ -219,6 +224,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="fleet SLO: dispatch to the least-loaded chip "
                         "whose recent top-1 agreement clears X, and record "
                         "the worst aggregate-agreement window")
+    g.add_argument("--async", dest="use_async", action="store_true",
+                   help="serve the fleet through the threaded front end "
+                        "(one worker thread per chip; jitted decode steps "
+                        "release the GIL, so per-chip decode overlaps in "
+                        "wall clock) instead of the synchronous tick loop")
+    g.add_argument("--queue-cap", type=int, default=None, metavar="N",
+                   help="async backpressure: cap on fleet-wide queued "
+                        "work; submissions block at the cap (default 64)")
     return ap
 
 
@@ -311,6 +324,14 @@ def validate_args(ap: argparse.ArgumentParser, args) -> None:
         if args.use_kernel:
             ap.error("--use-kernel is not threaded through the fleet path "
                      "(serve chips through the single-engine path)")
+    if args.use_async and (args.fleet is None or args.fleet < 2):
+        ap.error("--async drives the fleet front end (pass --fleet >= 2)")
+    if args.queue_cap is not None:
+        if not args.use_async:
+            ap.error("--queue-cap configures the --async admission queue "
+                     "(pass --async)")
+        if args.queue_cap < 1:
+            ap.error("--queue-cap needs at least one slot")
     if args.agreement_slo is not None:
         if args.fleet is None or args.fleet < 2:
             ap.error("--agreement-slo gates fleet dispatch "
@@ -518,9 +539,10 @@ def main() -> None:
             fleet_cfg = FleetConfig(
                 n_chips=fleet_n, agreement_slo=args.agreement_slo
             )
+            router_cls = AsyncFleetRouter if args.use_async else FleetRouter
             t0 = time.time()
             if program is not None:
-                router = FleetRouter.from_program(
+                router = router_cls.from_program(
                     program, cfg, serving_cfg, fleet_cfg,
                     ref_params=ref_params if ref_check else None,
                     src_params=src_params, mesh=mesh,
@@ -529,7 +551,7 @@ def main() -> None:
                 print(f"fleet: {fleet_n} replicas of the loaded chip draw "
                       f"in {time.time()-t0:.2f}s")
             else:
-                router = FleetRouter.build(
+                router = router_cls.build(
                     params, acfg, cfg, serving_cfg, fleet_cfg,
                     key=jax.random.PRNGKey(42),
                     ref_params=ref_params if ref_check else None,
@@ -539,10 +561,21 @@ def main() -> None:
                 print(f"programmed {fleet_n} independent chip draws in "
                       f"{time.time()-t0:.2f}s (b_adc={b_adc}, "
                       f"t={pcm_lib.format_age(t0_seconds)})")
-            freport = router.run(
-                trace,
-                scheduler=BucketedScheduler() if args.kv_page_size else None,
-            )
+            sched = BucketedScheduler() if args.kv_page_size else None
+            if args.use_async:
+                # the classmethods construct with the default AsyncConfig;
+                # the queue cap is the only knob the CLI exposes
+                router.async_cfg = AsyncConfig(
+                    queue_cap=args.queue_cap or 64
+                )
+                t1 = time.time()
+                freport = router.serve(trace, scheduler=sched)
+                print(f"async fleet: workers={fleet_n} "
+                      f"queue_cap={router.async_cfg.queue_cap} "
+                      f"wall={time.time()-t1:.2f}s "
+                      f"tokens_per_s={freport.tokens_per_s:.1f}")
+            else:
+                freport = router.run(trace, scheduler=sched)
             print(freport.summary())
             if ref_check:
                 c = freport.counters

@@ -42,7 +42,21 @@ layers):
   ``steps.refresh_program``, and rejoined with a reset age -- with at most
   ``FleetConfig.max_refreshing`` chips down at once and fleet-wide
   request conservation + programming-event accounting enforced
-  (:class:`FleetReport`).
+  (:class:`FleetReport`). ``FleetRouter.run`` is a thin wrapper over the
+  async front end's deterministic driver.
+* ``async_fleet.py`` -- :class:`AsyncFleetRouter`, the concurrent front
+  end over the same fleet. Each chip's :class:`EngineRun` is driven by
+  its own worker thread (jitted decode steps release the GIL inside XLA,
+  so per-chip decode overlaps in wall clock) under an actor discipline:
+  only the owning worker mutates a run; the coordinator -- dispatch,
+  health windows, staggered refresh, conservation -- talks to owners via
+  command queues and an event queue (statically linted as RL006).
+  Arrivals flow through a bounded :class:`AdmissionQueue`
+  (:class:`~repro.serving.config.AsyncConfig` ``queue_cap`` +
+  block/shed policy -> :class:`QueueFull`), tokens stream per request
+  via ``submit_stream -> TokenStream``, and ``deterministic=True``
+  drives the identical worker code single-threaded under a virtual
+  clock for bit-reproducible chaos tests and benchmarks.
 
   With ``paged=True`` the slot rectangles become a block/paged KV cache
   (``models.attention.PagedKVCache``): resident memory is the page pool,
@@ -69,7 +83,14 @@ warns when a trace targets an MoE arch (paged prefill therefore drops to
 one request per call for MoE periods).
 """
 
+from repro.serving.async_fleet import (  # noqa: F401
+    AdmissionQueue,
+    AsyncFleetRouter,
+    QueueFull,
+    TokenStream,
+)
 from repro.serving.config import (  # noqa: F401
+    AsyncConfig,
     FleetConfig,
     ServingConfig,
 )

@@ -17,8 +17,12 @@ that shape, so the surface is two frozen dataclasses:
   aggregate-agreement SLO the router admits against, the per-chip refresh
   trigger, and the stagger discipline (how many chips may be down at once,
   and for how many router ticks a rewrite takes).
+* :class:`AsyncConfig` -- the async front end over the fleet
+  (``serving/async_fleet.py``): the fleet-wide queued-work cap, what
+  ``submit`` does when the cap is hit (block vs shed), how many worker
+  threads drive the chips, and the idle poll cadence.
 
-Both validate eagerly in ``__post_init__`` so a bad value dies at config
+All validate eagerly in ``__post_init__`` so a bad value dies at config
 construction, not deep inside a serving run. Legacy
 ``ServingEngine(n_slots=..., ...)`` kwargs still work for one release via a
 deprecation shim (exactly one :class:`DeprecationWarning` per construction).
@@ -121,7 +125,11 @@ class FleetConfig:
     ``max_refreshing``
         Stagger width: at most this many chips may be down (draining /
         rewriting) at any moment, so the fleet never loses more than a
-        known fraction of its capacity to refreshes.
+        known fraction of its capacity to refreshes. When refreshes are
+        armed (``refresh_below`` set) this must leave at least one chip
+        serving (``max_refreshing < n_chips``) -- otherwise a drain of
+        the last healthy chip has nowhere to migrate its in-flight
+        requests and dispatch dies mid-run.
     ``refresh_steps``
         Router ticks a chip stays out of rotation while its rewrite is in
         flight -- the modelled PCM write latency. Siblings carry the
@@ -158,3 +166,67 @@ class FleetConfig:
                     f"{name} is a top-1-agreement fraction in [0, 1], "
                     f"got {v}"
                 )
+        if self.refresh_below is not None and self.max_refreshing >= self.n_chips:
+            raise ValueError(
+                f"max_refreshing={self.max_refreshing} with "
+                f"n_chips={self.n_chips} would allow every chip to drain at "
+                f"once, leaving migrated requests nowhere to go -- "
+                f"max_refreshing must be < n_chips when refreshes are armed"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Configuration of the async fleet front end.
+
+    (:class:`~repro.serving.async_fleet.AsyncFleetRouter` -- the threaded
+    serving layer over a fleet of chips.)
+
+    ``queue_cap``
+        Fleet-wide queued-work cap: the number of accepted-but-not-yet-
+        admitted requests (admission queue + per-chip engine queues +
+        dispatched-but-unprocessed submissions) at which ``submit`` /
+        ``submit_stream`` applies backpressure.
+    ``shed_policy``
+        What backpressure does: ``"block"`` makes submit wait until work
+        drains below the cap (bounded by ``submit_timeout_s`` when set);
+        ``"shed"`` raises :class:`~repro.serving.async_fleet.QueueFull`
+        immediately.
+    ``workers``
+        Decode worker threads. ``None`` (default) gives every chip its
+        own worker -- maximum decode overlap, since jitted decode steps
+        release the GIL inside XLA. Fewer workers than chips round-robins
+        chips across workers (chip ``c`` is owned by worker
+        ``c % workers``); each chip is still owned by exactly one worker,
+        which is the fleet's whole thread-safety story.
+    ``submit_timeout_s``
+        With ``shed_policy="block"``: how long a blocked submit waits for
+        capacity before raising ``QueueFull``. ``None`` waits forever.
+    ``poll_s``
+        Idle poll cadence for workers with no admissible work and for the
+        coordinator between bookkeeping ticks. Real-clock threads only;
+        the deterministic driver paces itself off the injected clock.
+    """
+
+    queue_cap: int = 64
+    shed_policy: str = "block"
+    workers: Optional[int] = None
+    submit_timeout_s: Optional[float] = None
+    poll_s: float = 1e-3
+
+    def __post_init__(self):
+        if self.queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1, got {self.queue_cap}")
+        if self.shed_policy not in ("block", "shed"):
+            raise ValueError(
+                f"shed_policy must be 'block' or 'shed', got "
+                f"{self.shed_policy!r}"
+            )
+        if self.workers is not None and self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.submit_timeout_s is not None and self.submit_timeout_s < 0:
+            raise ValueError(
+                f"submit_timeout_s must be >= 0, got {self.submit_timeout_s}"
+            )
+        if self.poll_s <= 0:
+            raise ValueError(f"poll_s must be > 0, got {self.poll_s}")

@@ -546,6 +546,8 @@ class ServingEngine:
         sleep_fn=None,
         max_steps: Optional[int] = None,
         track_events: bool = True,
+        on_token=None,
+        on_retire=None,
     ) -> "EngineRun":
         """Open a fresh :class:`EngineRun` over this engine's (already
         compiled) closures.
@@ -557,6 +559,13 @@ class ServingEngine:
         program-event accounting to an outer owner (the fleet router owns
         it fleet-wide: with several engines sharing the global counter,
         per-run deltas would see sibling chips' refreshes).
+
+        ``on_token(rid, token)`` fires for every token as it reaches the
+        host -- the first token at admission, then one per decode step --
+        and ``on_retire(record)`` fires when a request retires. Both run
+        inline on whatever thread is stepping the run (the async fleet's
+        streaming path); they must be cheap and must not call back into
+        the run.
         """
         return EngineRun(
             self,
@@ -566,6 +575,8 @@ class ServingEngine:
             sleep_fn=sleep_fn or (clock or clock_lib.SYSTEM).sleep,
             max_steps=max_steps,
             track_events=track_events,
+            on_token=on_token,
+            on_retire=on_retire,
         )
 
     def run(
@@ -607,6 +618,18 @@ class EngineRun:
     :meth:`refresh_chip` to account the rewrite. The stepping order per
     tick is *admit then decode* -- exactly the order the single-engine
     loop uses, so a router-driven run is bit-identical to a solo one.
+
+    Thread-safety: an ``EngineRun`` is **not** internally synchronized.
+    Every mutating method (``submit``/``admit_arrived``/``decode_step``/
+    ``evict``/``refresh_chip``/``retire``/``finish``) assumes a single
+    caller; the slot list, the jax cache handles, and the counters are
+    plain shared state. The concurrency contract (the async fleet's actor
+    discipline, linted as RL006) is *exclusive ownership*: exactly one
+    worker thread drives a given run, and other threads interact with it
+    only by enqueuing commands to that owner. Bare counter/len reads
+    (``n_active``, ``agree_sum``, ``decisions``, ``len(run.queue)``) are
+    GIL-atomic snapshots and are safe cross-thread for monitoring; acting
+    on the run from a non-owner thread is not.
     """
 
     def __init__(
@@ -619,6 +642,8 @@ class EngineRun:
         sleep_fn,
         max_steps: Optional[int],
         track_events: bool,
+        on_token=None,
+        on_retire=None,
     ):
         self.eng = engine
         self.scheduler = scheduler
@@ -627,6 +652,8 @@ class EngineRun:
         self.sleep_fn = sleep_fn
         self.max_steps = max_steps
         self.track_events = track_events
+        self.on_token = on_token
+        self.on_retire = on_retire
 
         self.queue: deque[Request] = deque()
         if engine.paged:
@@ -815,6 +842,8 @@ class EngineRun:
                 # repro-lint: disable=RL004 -- one sync per ADMISSION (not per decode tick): the first token must reach the host record
                 req, [int(tok0[0])], self.steps, self.now_fn() - self.t_start
             )
+            if self.on_token is not None:
+                self.on_token(req.rid, self.slots[slot].tokens[0])
             self.maybe_retire(slot)
 
     def _admit_paged(self, reqs: list[Request], free: list[int]) -> None:
@@ -886,6 +915,8 @@ class EngineRun:
                     self.now_fn() - self.t_start,
                     pages=pages, reserve_left=need - nbp_real,
                 )
+                if self.on_token is not None:
+                    self.on_token(req.rid, self.slots[slot].tokens[0])
                 self.maybe_retire(slot)
             self.t_prefill += self.now_fn() - t0
 
@@ -930,6 +961,8 @@ class EngineRun:
         self.slot_steps += len(active)
         for i in active:
             self.slots[i].tokens.append(int(nxt_np[i]))
+            if self.on_token is not None:
+                self.on_token(self.slots[i].req.rid, self.slots[i].tokens[-1])
             if eng._ref:
                 self.agree_sum += float(a_np[i])
                 self.err_sum += float(e_np[i])
@@ -992,21 +1025,26 @@ class EngineRun:
     # -- retirement / migration -------------------------------------------
 
     def retire(self, i: int, st: _Slot, by: str) -> None:
-        self.records.append(
-            RequestRecord(
-                rid=st.req.rid,
-                slot=i,
-                tokens=np.asarray(st.tokens, np.int32),
-                n_prompt=int(st.req.prompt.size),
-                admit_step=st.admit_step,
-                finish_step=self.steps,
-                arrival_t=st.req.arrival_t,
-                admit_t=st.admit_t,
-                finish_t=self.now_fn() - self.t_start,
-                finished_by=by,
-            )
+        # a migration continuation carries the FIRST chip's first-token
+        # time; recording it as admit_t keeps ttft_s spanning every chip
+        # the request touched instead of restarting at re-admission
+        first_t = st.req.first_token_t
+        rec = RequestRecord(
+            rid=st.req.rid,
+            slot=i,
+            tokens=np.asarray(st.tokens, np.int32),
+            n_prompt=int(st.req.prompt.size),
+            admit_step=st.admit_step,
+            finish_step=self.steps,
+            arrival_t=st.req.arrival_t,
+            admit_t=st.admit_t if first_t is None else first_t,
+            finish_t=self.now_fn() - self.t_start,
+            finished_by=by,
         )
+        self.records.append(rec)
         self._release_slot(i, st)
+        if self.on_retire is not None:
+            self.on_retire(rec)
 
     def maybe_retire(self, i: int) -> None:
         st = self.slots[i]

@@ -45,7 +45,6 @@ refreshes consumed.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Any, Optional
 
 import jax
@@ -58,7 +57,6 @@ from repro.models.common import ModelConfig
 from repro.serving.config import FleetConfig, ServingConfig
 from repro.serving.engine import DriftPolicy, ServeReport, ServingEngine
 from repro.serving.requests import Request
-from repro.serving.scheduler import BucketedScheduler, ContinuousScheduler
 
 
 @dataclasses.dataclass
@@ -78,6 +76,9 @@ class FleetRecord:
     arrival_t: float
     finish_t: float
     finished_by: str
+    #: when the request's FIRST chip emitted its first token -- carried
+    #: through migration, so ttft_s spans chips (0.0 on legacy records)
+    first_token_t: float = 0.0
 
     @property
     def n_new(self) -> int:
@@ -90,6 +91,11 @@ class FleetRecord:
     @property
     def latency_s(self) -> float:
         return self.finish_t - self.arrival_t
+
+    @property
+    def ttft_s(self) -> float:
+        """Arrival to the first chip's first token (migration-aware)."""
+        return self.first_token_t - self.arrival_t
 
 
 @dataclasses.dataclass
@@ -159,12 +165,20 @@ class FleetReport:
             return 0.0
         return float(np.percentile([r.latency_s for r in self.records], pct))
 
+    def ttft_s(self, pct: float) -> float:
+        """Time-to-first-token percentile (seconds), fleet-wide; a
+        migrated request's TTFT is measured on its FIRST chip."""
+        if not self.records:
+            return 0.0
+        return float(np.percentile([r.ttft_s for r in self.records], pct))
+
     def summary(self) -> str:
         line = (
             f"fleet: chips={self.n_chips} requests={self.n_requests} "
             f"tokens={self.n_generated} ticks={self.n_ticks} "
             f"tokens_per_s={self.tokens_per_s:.1f} "
             f"p95_ms={self.latency_s(95) * 1e3:.0f} "
+            f"p95_ttft_ms={self.ttft_s(95) * 1e3:.0f} "
             f"migrated={self.n_migrated} reprograms={self.reprograms} "
             f"program_events_delta={self.program_events_delta}"
         )
@@ -310,303 +324,29 @@ class FleetRouter:
         router-driven so in-flight work can migrate: set
         ``FleetConfig.refresh_below`` instead). ``force_refresh`` maps
         router tick -> chip index to drain at that tick regardless of
-        agreement (the chaos hook the kill-a-chip tests use).
+        agreement (the chaos hook the kill-a-chip tests use); a forced
+        drain blocked by the stagger cap (or an already-down chip) is
+        re-queued to the next eligible tick, not dropped.
+
+        This is now a thin wrapper over the async front end's
+        deterministic driver
+        (:meth:`~repro.serving.async_fleet.AsyncFleetRouter.serve` with
+        ``deterministic=True``): the identical single-threaded tick loop,
+        so existing storm/replay tests and virtual-clock benchmarks keep
+        their bit-exact behaviour.
         """
-        cfg = self.fleet_cfg
-        n = cfg.n_chips
-        now_fn = now_fn or (clock or clock_lib.SYSTEM).now
-        sleep_fn = sleep_fn or (clock or clock_lib.SYSTEM).sleep
-        force_refresh = dict(force_refresh or {})
+        from repro.serving.async_fleet import AsyncFleetRouter
 
-        if drift_policies is None:
-            policies: list[Optional[DriftPolicy]] = [None] * n
-        elif isinstance(drift_policies, DriftPolicy):
-            policies = [drift_policies] * n
-        else:
-            policies = list(drift_policies)
-            if len(policies) != n:
-                raise ValueError(
-                    f"need one drift policy per chip ({n}), "
-                    f"got {len(policies)}"
-                )
-        for p in policies:
-            if p is not None and p.refresh_below is not None:
-                raise ValueError(
-                    "per-chip DriftPolicy.refresh_below is engine-local "
-                    "(it rewrites mid-flight); fleet refresh must drain "
-                    "and migrate -- set FleetConfig.refresh_below instead"
-                )
-        refresh_enabled = cfg.refresh_below is not None or bool(force_refresh)
-        if refresh_enabled:
-            for c, e in enumerate(self.engines):
-                if e.program is None or e.src_params is None:
-                    raise ValueError(
-                        f"chip {c}: refresh needs a compiled program and "
-                        "src_params on every engine"
-                    )
-        if cfg.refresh_below is not None and not self.engines[0]._ref:
-            raise ValueError(
-                "the agreement refresh trigger needs the reference "
-                "counters: build the engines with ref_params (and "
-                "ref_check on)"
-            )
-
-        rids = [r.rid for r in requests]
-        if len(set(rids)) != len(rids):
-            raise ValueError("request rids must be unique fleet-wide")
-        if scheduler is None:
-            scheduler = (
-                BucketedScheduler()
-                if self.engines[0].paged
-                else ContinuousScheduler()
-            )
-
-        events0 = engine_mod.program_event_count()
-        allowed_events = 0
-        t0 = now_fn()
-        runs = [
-            e.start_run(
-                scheduler=scheduler,
-                drift_policy=policies[c],
-                now_fn=now_fn,
-                sleep_fn=sleep_fn,
-                track_events=False,  # the router accounts fleet-wide
-            )
-            for c, e in enumerate(self.engines)
-        ]
-        pending = deque(sorted(requests, key=lambda r: r.arrival_t))
-        down = [0] * n  # ticks left out of rotation (0 = serving)
-        # router-side bookkeeping for migration stitching and health
-        prefix: dict[int, list[int]] = {}  # rid -> tokens before migration
-        chips_of: dict[int, list[int]] = {r.rid: [] for r in requests}
-        base_agree = [0.0] * n
-        base_dec = [0] * n
-        health: list[Optional[float]] = [None] * n
-        events: list[dict] = []
-        windows: list[dict] = []
-        window_saw_down = False
-        ticks = 0
-
-        def load(c: int) -> int:
-            return runs[c].n_active + len(runs[c].queue)
-
-        def pick_chip(exclude: Optional[int] = None) -> int:
-            up = [
-                c for c in range(n)
-                if not down[c] and c != exclude
-            ]
-            if not up:
-                raise RuntimeError(
-                    "no chip available for dispatch -- max_refreshing "
-                    "must leave at least one chip serving"
-                )
-            ok = [
-                c for c in up
-                if cfg.agreement_slo is None
-                or health[c] is None
-                or health[c] >= cfg.agreement_slo
-            ]
-            pool = ok or up  # never deadlock traffic on the SLO
-            return min(pool, key=lambda c: (load(c), c))
-
-        def dispatch(req: Request, exclude: Optional[int] = None) -> int:
-            c = pick_chip(exclude)
-            runs[c].submit([req])
-            chips_of[req.rid].append(c)
-            return c
-
-        def drain(c: int, tick: int, trigger: str, top1) -> None:
-            nonlocal allowed_events, window_saw_down
-            window_saw_down = True  # even a refresh_steps=0 blink counts
-            migrated = 0
-            # live slots -> lossless continuations on siblings: the
-            # generated stream so far becomes prompt suffix, the budget
-            # shrinks by what was already produced
-            for slot, req, tokens in runs[c].live():
-                runs[c].evict(slot)
-                prefix.setdefault(req.rid, []).extend(tokens)
-                cont = Request(
-                    rid=req.rid,
-                    prompt=np.concatenate(
-                        [req.prompt, np.asarray(tokens, np.int32)]
-                    ),
-                    max_new_tokens=req.max_new_tokens - len(tokens),
-                    eos_id=req.eos_id,
-                    arrival_t=now_fn() - t0,
-                    features=req.features,
-                )
-                dispatch(cont, exclude=c)
-                migrated += 1
-            # queued-but-unadmitted requests just re-dispatch unchanged
-            while runs[c].queue:
-                req = runs[c].queue.popleft()
-                chips_of[req.rid].remove(c)
-                dispatch(req, exclude=c)
-                migrated += 1
-            events.append(
-                {
-                    "kind": "drain", "tick": tick, "chip": c,
-                    "trigger": trigger, "top1": top1, "migrated": migrated,
-                }
-            )
-            if cfg.refresh_steps == 0:
-                rejoin(c, tick)
-            else:
-                down[c] = cfg.refresh_steps
-
-        def rejoin(c: int, tick: int) -> None:
-            nonlocal allowed_events
-            key = jax.random.fold_in(
-                jax.random.fold_in(self.rng, 8_000_000 + tick), c
-            )
-            allowed_events += runs[c].refresh_chip(key)
-            # the chip returns with a clean slate: its degradation window
-            # described the OLD programming
-            base_agree[c] = runs[c].agree_sum
-            base_dec[c] = runs[c].decisions
-            health[c] = None
-            events.append(
-                {
-                    "kind": "reprogram", "tick": tick, "chip": c,
-                    "t_device": self.engines[c].program.t_seconds,
-                }
-            )
-
-        while pending or any(r.has_work for r in runs) or any(down):
-            now = now_fn() - t0
-            while pending and pending[0].arrival_t <= now:
-                dispatch(pending.popleft())
-
-            progressed = False
-            for c in range(n):
-                if down[c]:
-                    continue
-                runs[c].admit_arrived()
-                if runs[c].n_active:
-                    runs[c].decode_step()
-                    progressed = True
-            ticks += 1
-
-            # the write-latency clock runs on router ticks, progress or
-            # not -- a down chip must eventually rejoin
-            for c in range(n):
-                if down[c]:
-                    down[c] -= 1
-                    if down[c] == 0:
-                        rejoin(c, ticks)
-
-            if ticks in force_refresh:
-                c = force_refresh.pop(ticks)
-                if not down[c] and sum(1 for d in down if d) < cfg.max_refreshing:
-                    drain(c, ticks, "forced", None)
-
-            if any(down):
-                window_saw_down = True
-
-            if ticks % cfg.check_every == 0:
-                win_agree, win_dec = 0.0, 0
-                tops: list[tuple[int, float]] = []
-                for c in range(n):
-                    wa = runs[c].agree_sum - base_agree[c]
-                    wd = runs[c].decisions - base_dec[c]
-                    base_agree[c] = runs[c].agree_sum
-                    base_dec[c] = runs[c].decisions
-                    win_agree += wa
-                    win_dec += wd
-                    if wd > 0:
-                        health[c] = wa / wd
-                        if not down[c]:
-                            tops.append((c, wa / wd))
-                if win_dec > 0:
-                    windows.append(
-                        {
-                            "tick": ticks,
-                            "top1": win_agree / win_dec,
-                            "decisions": win_dec,
-                            "any_down": window_saw_down,
-                        }
-                    )
-                window_saw_down = any(down)
-                if cfg.refresh_below is not None:
-                    # worst chip first; stagger: never exceed the down cap
-                    for c, top1 in sorted(tops, key=lambda t: t[1]):
-                        if top1 >= cfg.refresh_below:
-                            break
-                        if sum(1 for d in down if d) >= cfg.max_refreshing:
-                            break
-                        drain(c, ticks, "agreement", top1)
-
-            if not progressed and pending and not any(down):
-                wait = pending[0].arrival_t - (now_fn() - t0)
-                sleep_fn(max(min(wait, 0.01), 1e-4))
-
-            if max_ticks is not None and ticks >= max_ticks:
-                raise RuntimeError(
-                    f"fleet run exceeded max_ticks={max_ticks} with "
-                    f"{len(pending)} pending and "
-                    f"{sum(r.n_active for r in runs)} live requests"
-                )
-
-        per_chip = [r.finish() for r in runs]
-
-        # conservation: every submitted request retired exactly once,
-        # fleet-wide -- migration must neither lose nor duplicate
-        seen: dict[int, Any] = {}
-        for rep in per_chip:
-            for rec in rep.records:
-                if rec.rid in seen:
-                    raise RuntimeError(
-                        f"request {rec.rid} retired on more than one chip "
-                        "-- migration duplicated it"
-                    )
-                seen[rec.rid] = rec
-        lost = sorted(set(rids) - set(seen))
-        if lost:
-            raise RuntimeError(
-                f"requests {lost} were admitted but never retired -- "
-                "migration lost them"
-            )
-
-        by_rid = {r.rid: r for r in requests}
-        records = []
-        for rid in rids:
-            rec = seen[rid]
-            toks = prefix.get(rid, []) + list(np.asarray(rec.tokens))
-            records.append(
-                FleetRecord(
-                    rid=rid,
-                    tokens=np.asarray(toks, np.int32),
-                    n_prompt=int(by_rid[rid].prompt.size),
-                    chips=tuple(chips_of[rid]),
-                    arrival_t=by_rid[rid].arrival_t,
-                    finish_t=rec.finish_t,
-                    finished_by=rec.finished_by,
-                )
-            )
-
-        delta = engine_mod.program_event_count() - events0
-        if delta != allowed_events:
-            raise RuntimeError(
-                f"fleet run recorded {delta} programming events but "
-                f"refreshes account for {allowed_events} -- serving must "
-                "never rewrite a chip outside a router-driven refresh"
-            )
-        counters = None
-        if self.engines[0]._ref:
-            agree = sum(r.agree_sum for r in runs)
-            dec = sum(r.decisions for r in runs)
-            counters = {
-                "top1": agree / max(dec, 1),
-                "decisions": dec,
-            }
-        return FleetReport(
-            records=records,
-            per_chip=per_chip,
-            events=events,
-            windows=windows,
-            counters=counters,
-            n_chips=n,
-            n_ticks=ticks,
-            wall=now_fn() - t0,
-            program_events_delta=delta - allowed_events,
+        front = AsyncFleetRouter(
+            self.engines, self.fleet_cfg, rng=self.rng, deterministic=True
+        )
+        return front.serve(
+            requests,
+            scheduler=scheduler,
+            drift_policies=drift_policies,
+            force_refresh=force_refresh,
+            clock=clock,
+            now_fn=now_fn,
+            sleep_fn=sleep_fn,
+            max_ticks=max_ticks,
         )

@@ -33,6 +33,13 @@ class Request:
     optionally carries non-token prefill inputs for the frontend families
     (``frames`` for audio, ``patches`` for VLM), each with a leading
     batch=1 axis; decode is always token-fed.
+
+    ``first_token_t`` is set only on migration continuations: the time the
+    request's FIRST chip emitted its first token. A continuation's prompt
+    embeds the tokens already generated elsewhere, so the destination's
+    own admission time is not the request's time-to-first-token -- the
+    retiring engine records ``first_token_t`` (when set) as the record's
+    ``admit_t`` so ``ttft_s`` spans every chip the request touched.
     """
 
     rid: int
@@ -41,6 +48,7 @@ class Request:
     eos_id: Optional[int] = None
     arrival_t: float = 0.0
     features: Optional[dict] = None
+    first_token_t: Optional[float] = None
 
     def __post_init__(self):
         object.__setattr__(

@@ -1,0 +1,307 @@
+"""The async fleet front end (repro.serving.async_fleet).
+
+Four claims under test:
+
+* **Conservation under real threads**: a refresh storm with per-chip
+  worker threads still retires every rid exactly once, with zero
+  programming events outside router-driven refreshes. (Assertions here
+  are thread-timing-independent on purpose: counts and sets, never
+  which chip served what.)
+* **Streaming**: a consumer iterating a :class:`TokenStream` -- from its
+  own thread, concurrently with the serving threads -- receives exactly
+  the retired token sequence of its request's fleet record.
+* **Backpressure**: ``AdmissionQueue`` blocks until capacity frees (or
+  times out into :class:`QueueFull`) under the block policy and sheds
+  immediately under the shed policy; the router's submit path applies
+  the same cap.
+* **Determinism**: ``deterministic=True`` drives the same worker code
+  single-threaded and is bit-identical to the synchronous
+  ``FleetRouter.run``; the threaded mode produces the same per-request
+  generations (placement-independence of continuous batching).
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.clock import VirtualClock
+from repro.core.analog import AnalogConfig
+from repro.models import ModelConfig, lm_init
+from repro.serving import (
+    AdmissionQueue,
+    AsyncConfig,
+    AsyncFleetRouter,
+    FleetConfig,
+    FleetRouter,
+    QueueFull,
+    Request,
+    ServingConfig,
+    ServingEngine,
+    poisson_trace,
+)
+
+DIGITAL = AnalogConfig()
+ACFG = AnalogConfig().infer(b_adc=8, t_seconds=86400.0)
+S_MAX = 24
+SCFG = ServingConfig(n_slots=2, s_max=S_MAX)
+
+
+@pytest.fixture(scope="module")
+def dense_cfg():
+    return ModelConfig(name="t", family="dense", n_kv_heads=2).smoke()
+
+
+@pytest.fixture(scope="module")
+def dense_params(dense_cfg):
+    return lm_init(jax.random.PRNGKey(0), dense_cfg)
+
+
+def _trace(cfg, n=8, key=5, new_tokens=(6, 12)):
+    return poisson_trace(
+        jax.random.PRNGKey(key), n, vocab=cfg.vocab, rate=500.0,
+        prompt_lens=(4, 8), new_tokens=new_tokens,
+    )
+
+
+def _digital_engines(cfg, params, n):
+    return [ServingEngine(cfg, DIGITAL, params, SCFG) for _ in range(n)]
+
+
+def _req(rid, arrival_t=0.0):
+    return Request(
+        rid=rid, prompt=np.arange(1, 5, dtype=np.int32), max_new_tokens=2,
+        arrival_t=arrival_t,
+    )
+
+
+# -------------------------------------------------------------- AsyncConfig
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(queue_cap=0),
+        dict(shed_policy="drop"),
+        dict(workers=0),
+        dict(submit_timeout_s=-1.0),
+        dict(poll_s=0.0),
+    ],
+)
+def test_async_config_validates(kw):
+    with pytest.raises(ValueError):
+        AsyncConfig(**kw)
+
+
+# ---------------------------------------------------------- AdmissionQueue
+
+
+def test_admission_queue_sheds_at_cap():
+    q = AdmissionQueue(2, "shed")
+    q.put(_req(1), lambda: 0)
+    q.put(_req(2), lambda: 0)
+    with pytest.raises(QueueFull):
+        q.put(_req(3), lambda: 0)
+    assert q.accepted == 2 and q.shed == 1
+    # external in-flight work (engine queues, unprocessed submissions)
+    # counts against the cap too
+    q.drain()
+    with pytest.raises(QueueFull):
+        q.put(_req(3), lambda: 5)
+
+
+def test_admission_queue_blocks_until_capacity_frees():
+    q = AdmissionQueue(1, "block", timeout_s=10.0)
+    q.put(_req(1), lambda: 0)
+
+    def late_drain():
+        time.sleep(0.05)
+        q.drain()
+
+    t = threading.Thread(target=late_drain)
+    t.start()
+    q.put(_req(2), lambda: 0)  # must block until the drain frees space
+    t.join()
+    assert [r.rid for r in q.drain()] == [2]
+    assert q.accepted == 2 and q.shed == 0
+
+
+def test_admission_queue_blocked_submit_times_out():
+    q = AdmissionQueue(1, "block", timeout_s=0.05)
+    q.put(_req(1), lambda: 0)
+    with pytest.raises(QueueFull, match="blocked submit"):
+        q.put(_req(2), lambda: 0)
+    assert q.shed == 1
+
+
+# ------------------------------------------------------------- determinism
+
+
+def test_deterministic_mode_matches_sync_router(dense_cfg, dense_params):
+    """Bitwise parity: the deterministic driver IS the synchronous
+    router's semantics -- same tokens, same routing, same timestamps
+    under the same virtual clock."""
+    engines = _digital_engines(dense_cfg, dense_params, 3)
+    trace = _trace(dense_cfg)
+    sync = FleetRouter(engines, FleetConfig(n_chips=3))
+    rep1 = sync.run(trace, clock=VirtualClock())
+    front = AsyncFleetRouter(
+        engines, FleetConfig(n_chips=3), deterministic=True
+    )
+    rep2 = front.serve(trace, clock=VirtualClock())
+    assert rep1.n_ticks == rep2.n_ticks
+    for a, b in zip(rep1.records, rep2.records):
+        assert a.rid == b.rid
+        assert np.array_equal(a.tokens, b.tokens)
+        assert a.chips == b.chips
+        assert a.arrival_t == b.arrival_t
+        assert a.finish_t == b.finish_t
+        assert a.first_token_t == b.first_token_t
+        assert a.finished_by == b.finished_by
+
+
+def test_threaded_generations_match_deterministic(dense_cfg, dense_params):
+    """Thread timing changes placement and admission order, never a
+    request's generation: continuous batching is semantically inert and
+    the digital chips are identical replicas."""
+    trace = _trace(dense_cfg, n=6)
+    det = AsyncFleetRouter(
+        _digital_engines(dense_cfg, dense_params, 3),
+        FleetConfig(n_chips=3), deterministic=True,
+    )
+    rep1 = det.serve(trace, clock=VirtualClock())
+    thr = AsyncFleetRouter(
+        _digital_engines(dense_cfg, dense_params, 3),
+        FleetConfig(n_chips=3),
+    )
+    rep2 = thr.serve(trace)
+    assert rep2.n_requests == len(trace)
+    for r in trace:
+        assert np.array_equal(rep1.tokens_of(r.rid), rep2.tokens_of(r.rid))
+
+
+# ---------------------------------------------------------------- streaming
+
+
+def test_streaming_consumers_see_retired_sequences(dense_cfg, dense_params):
+    """Concurrent consumers -- one thread per stream, iterating while the
+    chips decode -- each collect exactly their request's stitched fleet
+    record."""
+    router = AsyncFleetRouter(
+        _digital_engines(dense_cfg, dense_params, 2), FleetConfig(n_chips=2)
+    )
+    trace = _trace(dense_cfg, n=6, key=9)
+    router.start()
+    streams = [router.submit_stream(r) for r in trace]
+    collected: dict[int, list[int]] = {}
+
+    def consume(s):
+        collected[s.rid] = [tok for tok in s]
+
+    consumers = [
+        threading.Thread(target=consume, args=(s,)) for s in streams
+    ]
+    for t in consumers:
+        t.start()
+    rep = router.join()
+    for t in consumers:
+        t.join()
+
+    assert rep.n_requests == len(trace)
+    for rec in rep.records:
+        assert collected[rec.rid] == list(rec.tokens)
+    for s in streams:
+        assert s.done and s.record is not None and s.record.rid == s.rid
+
+
+def test_streaming_deterministic_session(dense_cfg, dense_params):
+    """The same session API under deterministic mode: submissions
+    accumulate, join() drives single-threaded, streams read back."""
+    router = AsyncFleetRouter(
+        _digital_engines(dense_cfg, dense_params, 2),
+        FleetConfig(n_chips=2), deterministic=True,
+    )
+    router.start(clock=VirtualClock())
+    streams = [router.submit_stream(r) for r in _trace(dense_cfg, n=4)]
+    rep = router.join()
+    assert rep.n_requests == 4
+    for rec in rep.records:
+        s = next(x for x in streams if x.rid == rec.rid)
+        assert s.tokens() == list(rec.tokens)
+        assert s.done
+
+
+# -------------------------------------------------------------- backpressure
+
+
+def test_submit_sheds_at_fleet_cap(dense_cfg, dense_params):
+    router = AsyncFleetRouter(
+        _digital_engines(dense_cfg, dense_params, 2),
+        FleetConfig(n_chips=2),
+        AsyncConfig(queue_cap=2, shed_policy="shed"),
+        deterministic=True,
+    )
+    router.start(clock=VirtualClock())
+    router.submit(_req(1))
+    router.submit(_req(2))
+    with pytest.raises(QueueFull):
+        router.submit(_req(3))
+    rep = router.join()
+    assert rep.n_requests == 2  # the shed request never entered the fleet
+    assert {r.rid for r in rep.records} == {1, 2}
+
+
+def test_session_api_misuse(dense_cfg, dense_params):
+    router = AsyncFleetRouter(
+        _digital_engines(dense_cfg, dense_params, 2),
+        FleetConfig(n_chips=2), deterministic=True,
+    )
+    with pytest.raises(RuntimeError, match="no open session"):
+        router.submit(_req(1))
+    router.start(clock=VirtualClock())
+    with pytest.raises(RuntimeError, match="already open"):
+        router.start()
+    with pytest.raises(RuntimeError, match="open start"):
+        router.serve([_req(1)])
+    router.submit(_req(1))
+    with pytest.raises(ValueError, match="unique"):
+        router.submit(_req(1))
+    with pytest.raises(ValueError, match="exceeds the fleet"):
+        router.submit(
+            Request(
+                rid=9, prompt=np.arange(1, 10, dtype=np.int32),
+                max_new_tokens=S_MAX,
+            )
+        )
+    rep = router.join()
+    assert rep.n_requests == 1
+
+
+# ------------------------------------------------- threaded refresh storm
+
+
+def test_threaded_refresh_storm_conserves_rids(dense_cfg, dense_params):
+    """The tentpole's chaos claim under real threads: a forced drain +
+    reprogram mid-flight loses nothing, duplicates nothing, and accounts
+    for every programming event."""
+    router = AsyncFleetRouter.build(
+        dense_params, ACFG, dense_cfg, SCFG,
+        FleetConfig(n_chips=2, refresh_steps=2),
+        key=jax.random.PRNGKey(3), src_params=dense_params,
+    )
+    trace = _trace(dense_cfg, n=8, key=13)
+    rep = router.serve(trace, force_refresh={4: 0})
+    # conservation: every rid retired exactly once with its full budget
+    assert len(rep.records) == len(trace)
+    assert {r.rid for r in rep.records} == {r.rid for r in trace}
+    budget_of = {r.rid: r.max_new_tokens for r in trace}
+    for rec in rep.records:
+        assert rec.n_new == budget_of[rec.rid]
+        assert rec.ttft_s >= 0.0
+    # the forced refresh fired, and nothing else wrote to a chip
+    assert rep.reprograms == 1
+    assert rep.program_events_delta == 0
+    kinds = [e["kind"] for e in rep.events]
+    assert kinds.count("drain") == 1 and kinds.count("reprogram") == 1

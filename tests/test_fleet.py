@@ -264,6 +264,10 @@ def test_config_and_legacy_kwargs_conflict(dense_cfg, dense_params):
         dict(n_chips=2, refresh_steps=-1),
         dict(n_chips=2, agreement_slo=1.5),
         dict(n_chips=2, refresh_below=-0.1),
+        # refreshes armed with the whole fleet allowed down at once: the
+        # drain of the last serving chip would have nowhere to migrate
+        dict(n_chips=2, refresh_below=0.5, max_refreshing=2),
+        dict(n_chips=1, refresh_below=0.5),
     ],
 )
 def test_fleet_config_validates(kw):
@@ -318,22 +322,111 @@ def test_router_run_preconditions(dense_cfg, dense_params):
         router.run([req], drift_policies=[None])
 
 
-def test_agreement_trigger_needs_ref_counters(storm, dense_cfg,
-                                              dense_params):
-    """A programmed, refreshable chip still cannot run the agreement
-    trigger without the digital-reference counters."""
+@pytest.fixture(scope="module")
+def sibling_engines(storm, dense_cfg, dense_params):
+    """Two refreshable engines sharing the storm fleet's compiled
+    programs (src_params but NO ref counters)."""
     router, _, _ = storm
-    eng = ServingEngine.for_program(
-        router.engines[1].program, dense_cfg,
-        ServingConfig(n_slots=2, s_max=S_MAX), src_params=dense_params,
-    )
+    return [
+        ServingEngine.for_program(
+            router.engines[c].program, dense_cfg,
+            ServingConfig(n_slots=2, s_max=S_MAX), src_params=dense_params,
+        )
+        for c in (1, 2)
+    ]
+
+
+def test_agreement_trigger_needs_ref_counters(sibling_engines):
+    """A programmed, refreshable fleet still cannot run the agreement
+    trigger without the digital-reference counters."""
     blind = FleetRouter(
-        [eng], FleetConfig(n_chips=1, refresh_below=0.5)
+        sibling_engines, FleetConfig(n_chips=2, refresh_below=0.5)
     )
     req = Request(rid=1, prompt=np.arange(1, 5, dtype=np.int32),
                   max_new_tokens=2)
     with pytest.raises(ValueError, match="reference"):
         blind.run([req])
+
+
+def test_forced_refresh_width_checked_at_serve(sibling_engines):
+    """A force_refresh schedule wide enough to drain the last serving
+    chip dies eagerly at serve time, not with a mid-flight RuntimeError."""
+    fleet = FleetRouter(
+        sibling_engines, FleetConfig(n_chips=2, max_refreshing=2)
+    )
+    req = Request(rid=1, prompt=np.arange(1, 5, dtype=np.int32),
+                  max_new_tokens=2)
+    with pytest.raises(ValueError, match="last serving chip"):
+        fleet.run([req], force_refresh={2: 0, 3: 1})
+
+
+# ------------------------------------------- tick-loop regression sweep
+
+
+def test_migrated_latency_spans_both_chips(storm):
+    """Regression: drain() used to reset a continuation's ``arrival_t``
+    to the migration time, so a migrated request's recorded latency
+    covered only its stay on the destination chip."""
+    router, trace, rep = storm
+    by_rid = {r.rid: r for r in trace}
+    migrated = [r for r in rep.records if r.migrations]
+    assert migrated, "the forced kill migrated nothing"
+    for rec in migrated:
+        dest = rec.chips[-1]
+        dest_rec = next(
+            r for r in rep.per_chip[dest].records if r.rid == rec.rid
+        )
+        # the continuation carries the ORIGINAL arrival through migration
+        assert dest_rec.arrival_t == by_rid[rec.rid].arrival_t
+        # ...and the first chip's admission time, so TTFT measures the
+        # first token ever emitted, not the destination's re-prefill
+        assert rec.first_token_t == dest_rec.admit_t
+        assert 0.0 <= rec.ttft_s <= rec.latency_s
+        # the destination re-prefilled strictly after the first chip had
+        # generated k >= 1 tokens; an arrival reset would violate this
+        assert dest_rec.latency_s > rec.ttft_s
+
+
+def test_first_token_time_survives_retirement(dense_cfg, dense_params):
+    """Unit pin of the carry mechanism: a continuation's
+    ``first_token_t`` becomes the retiring record's ``admit_t``."""
+    eng = _digital_engine(dense_cfg, dense_params)
+    req = Request(
+        rid=7, prompt=np.arange(1, 5, dtype=np.int32), max_new_tokens=2,
+        arrival_t=1.0, first_token_t=1.25,
+    )
+    rep = eng.run([req], clock=_Clock(start=2.0))
+    rec = rep.records[0]
+    assert rec.admit_t == 1.25
+    assert rec.ttft_s == pytest.approx(0.25)
+
+
+def test_forced_refresh_defers_until_eligible(sibling_engines, dense_cfg):
+    """Regression: a forced drain landing while the stagger cap is
+    saturated was silently dropped; it must re-queue to the next
+    eligible tick and still reprogram the chip."""
+    fleet = FleetRouter(
+        sibling_engines,
+        FleetConfig(n_chips=2, refresh_steps=6, max_refreshing=1),
+        rng=jax.random.PRNGKey(7),
+    )
+    trace = _trace(dense_cfg, n=8, key=11, new_tokens=(10, 16))
+    rep = fleet.run(
+        trace, force_refresh={3: 0, 4: 1}, clock=_Clock(), max_ticks=2000,
+    )
+    # chip 0 drains at tick 3 and is down through tick 9; chip 1's forced
+    # drain at tick 4 collides with max_refreshing=1 and must defer until
+    # chip 0 rejoins -- the old code dropped it (reprograms stayed at 1)
+    assert rep.reprograms == 2
+    drains = [e for e in rep.events if e["kind"] == "drain"]
+    assert [d["chip"] for d in drains] == [0, 1]
+    rejoin0 = next(
+        e for e in rep.events
+        if e["kind"] == "reprogram" and e["chip"] == 0
+    )
+    assert drains[1]["tick"] >= rejoin0["tick"]
+    assert len(rep.records) == len(trace)
+    assert rep.program_events_delta == 0
 
 
 def test_storm_replay_reuses_every_warmed_trace(storm, assert_max_retraces):

@@ -395,6 +395,61 @@ def test_rl005_exempt_zones():
     ]
 
 
+# ------------------------------------------------------------------ RL006
+
+
+def test_rl006_flags_engine_mutation_outside_worker():
+    out = lint(
+        """
+        import threading
+
+        class Coordinator:
+            def tick(self, runs):
+                for run in runs:
+                    run.admit_arrived()
+                    run.decode_step()
+        """
+    )
+    assert rules_of(out) == ["RL006", "RL006"]
+    assert "owning" in out[0].message
+
+
+def test_rl006_clean_inside_worker_or_lock():
+    # the actor discipline: the owning *Worker* class mutates freely, and
+    # an explicit with-guard is the sanctioned escape hatch
+    out = lint(
+        """
+        import threading
+
+        class ChipWorker:
+            def tick(self, run):
+                run.admit_arrived()
+                run.decode_step()
+
+        class Router:
+            def force(self, run, lock):
+                with lock:
+                    run.evict(0)
+        """
+    )
+    assert out == []
+
+
+def test_rl006_inert_without_threading():
+    # single-threaded modules (the deterministic driver's callers, the
+    # engine's own tests) mutate runs directly all the time -- the rule
+    # only arms itself where threads exist
+    out = lint(
+        """
+        def drive(run):
+            while run.has_work:
+                run.admit_arrived()
+                run.decode_step()
+        """
+    )
+    assert out == []
+
+
 # ------------------------------------------------- suppressions and meta
 
 
@@ -514,7 +569,7 @@ def test_format_json_stable_and_parseable():
 
 def test_registry_covers_the_documented_rules():
     rules = [c.rule for c in all_checks()]
-    assert rules == ["RL001", "RL002", "RL003", "RL004", "RL005"]
+    assert rules == ["RL001", "RL002", "RL003", "RL004", "RL005", "RL006"]
 
 
 # ------------------------------------------------------------------- CLI
@@ -560,7 +615,7 @@ def test_cli_usage_errors(tmp_path, capsys):
 def test_cli_list_rules(capsys):
     assert main(["--list-rules"]) == 0
     out = capsys.readouterr().out
-    for rule in ("RL001", "RL002", "RL003", "RL004", "RL005"):
+    for rule in ("RL001", "RL002", "RL003", "RL004", "RL005", "RL006"):
         assert rule in out
 
 

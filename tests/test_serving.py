@@ -205,6 +205,18 @@ BAD_ARGV = {
         "--analog", "--fleet", "2", "--request-trace", "4",
         "--agreement-slo", "1.5",
     ],
+    "async_without_fleet": ["--analog", "--request-trace", "3", "--async"],
+    "async_on_fleet_of_one": [
+        "--analog", "--fleet", "1", "--request-trace", "3", "--async"
+    ],
+    "queue_cap_without_async": [
+        "--analog", "--fleet", "2", "--request-trace", "4",
+        "--queue-cap", "8",
+    ],
+    "queue_cap_zero": [
+        "--analog", "--fleet", "2", "--request-trace", "4",
+        "--async", "--queue-cap", "0",
+    ],
 }
 
 
@@ -255,6 +267,24 @@ def test_serve_cli_fleet_smoke(monkeypatch, capsys):
     assert "fleet: chips=2 requests=6" in out
     assert "program_events_delta=0" in out
     assert "accuracy_vs_digital_ref:" in out
+
+
+def test_serve_cli_async_fleet_smoke(monkeypatch, capsys):
+    """The threaded front end through the CLI: same fleet, same
+    conservation evidence, plus the greppable async throughput line."""
+    from repro.launch import serve
+
+    monkeypatch.setattr(
+        "sys.argv",
+        ["serve", "--analog", "--batch", "2", "--prompt-len", "8",
+         "--tokens", "4", "--request-trace", "6", "--arrival-rate", "200",
+         "--fleet", "2", "--async", "--queue-cap", "16"],
+    )
+    serve.main()
+    out = capsys.readouterr().out
+    assert "async fleet: workers=2 queue_cap=16" in out
+    assert "fleet: chips=2 requests=6" in out
+    assert "program_events_delta=0" in out
 
 
 def test_serve_cli_fleet_of_one_is_the_single_engine_path(monkeypatch,
