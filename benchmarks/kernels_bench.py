@@ -9,11 +9,14 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, time_call
+from benchmarks.common import csv_row, launch_count, time_call
 from repro.core import engine as engine_lib
 from repro.core.analog import AnalogConfig
+from repro.kernels import decode_fused as df
 from repro.kernels.ops import analog_mvm
 from repro.kernels.ref import analog_mvm_ref
+from repro.models import lm
+from repro.models.common import ModelConfig
 
 HBM_BW = 819e9
 
@@ -64,14 +67,104 @@ def _execute_mvm_rows(fast: bool) -> list[str]:
         us_k = time_call(jax.jit(kernel), x_q, w, iters=iters)
         dev = float(jnp.max(jnp.abs(kernel(x_q, w) - oracle(x_q, w))))
         backend = "tpu" if on_tpu else "interpret"
+        # dispatch accounting: the oracle is pure XLA (0 Pallas launches),
+        # the kernel backend is exactly one launch per MVM
+        l_o = launch_count(oracle, x_q, w)
+        l_k = launch_count(kernel, x_q, w)
         rows.append(csv_row(
             f"execute_mvm_oracle_gdc_{m}x{k}x{n}", us_o,
-            f"backend=jnp_tiles={plan_o.n_row_tiles}"))
+            f"backend=jnp_tiles={plan_o.n_row_tiles}_launches={l_o}"))
         rows.append(csv_row(
             f"execute_mvm_kernel_gdc_{m}x{k}x{n}", us_k,
             f"backend={backend}_speedup_vs_oracle={us_o / max(us_k, 1e-9):.2f}x"
-            f"_max_abs_dev={dev:.2e}"))
+            f"_max_abs_dev={dev:.2e}_launches={l_k}"))
     return rows
+
+
+def _decode_step_rows(fast: bool) -> list[str]:
+    """Whole-step megakernel vs the per-layer XLA decode walk.
+
+    ``decode_step_xla`` is the serving default: ``lm_forward`` threads
+    ``7 * n_layers + 1`` separate ``execute_mvm`` dispatches (plus
+    norms/attention glue) through XLA per decode step. ``decode_step_fused``
+    executes the SAME step as ONE ``pallas_call`` over a layer-walk grid
+    (``kernels/decode_fused.py``). Both rows carry a launch column from
+    :func:`benchmarks.common.launch_count`; the fused row asserts exactly
+    one launch and bitwise logit/token parity with the unfused path before
+    timing anything. Off-TPU the fused kernel runs in interpret mode --
+    the row is a parity/launch-count check only; on a TPU host the grid
+    lowers natively and the >= 1.3x tokens/s floor is asserted.
+    """
+    on_tpu = jax.devices()[0].platform == "tpu"
+    cfg = ModelConfig(name="bench", family="dense", n_kv_heads=2).smoke()
+    acfg = AnalogConfig().infer(b_adc=8)
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    program = engine_lib.compile_program(
+        params, acfg, jax.random.PRNGKey(42)
+    )
+    fplan = engine_lib.build_fused_plan(program)
+    pparams, pacfg = program.params, program.cfg
+
+    b, s_max = 4, 32
+    ucache = lm.init_lm_cache(cfg, b, s_max, cfg.dtype, stacked=False,
+                              per_slot=True)
+    fcache = df.init_fused_cache(cfg, fplan.n_groups, b, s_max, cfg.dtype)
+    for slot in range(b):
+        prompt = (jnp.arange(6 + slot)[None] * 5 % cfg.vocab).astype(
+            jnp.int32
+        )
+        c = lm.init_lm_cache(cfg, 1, s_max, cfg.dtype)
+        _, c = lm.lm_forward(pparams, {"tokens": prompt}, pacfg, cfg,
+                             cache=c, last_token_only=True)
+        pc = lm.unstack_cache(c)
+        ucache = lm.write_cache_slot(ucache, pc, slot)
+        fcache = df.write_fused_slot(fcache, pc, slot)
+    tok = jnp.full((b, 1), 7, jnp.int32)
+
+    def decode_xla(tok, cache):
+        return lm.lm_forward(pparams, {"tokens": tok}, pacfg, cfg,
+                             cache=cache)
+
+    def decode_fused(tok, cache):
+        return df.fused_decode_step(pparams, tok, cache, fplan, cfg, pacfg)
+
+    l_x = launch_count(decode_xla, tok, ucache)
+    l_f = launch_count(decode_fused, tok, fcache)
+    assert l_f == 1, f"fused decode must be ONE kernel launch, got {l_f}"
+    n_mvm = len(engine_lib.FUSED_PROJS) * fplan.n_groups + 1
+
+    lx, _ = decode_xla(tok, ucache)
+    lf, _ = decode_fused(tok, fcache)
+    assert jnp.array_equal(lx, lf), (
+        "fused decode diverged bitwise from the per-layer path"
+    )
+    assert jnp.array_equal(
+        jnp.argmax(lx[:, -1], -1), jnp.argmax(lf[:, -1], -1)
+    ), "fused decode emitted different tokens than the per-layer path"
+
+    iters = 2 if fast else 5
+    # repro-lint: disable=RL003 -- one jit per benchmarked path is the sweep design; time_call warms up first
+    us_x = time_call(jax.jit(decode_xla), tok, ucache, iters=iters)
+    # repro-lint: disable=RL003 -- one jit per benchmarked path is the sweep design; time_call warms up first
+    us_f = time_call(jax.jit(decode_fused), tok, fcache, iters=iters)
+    speedup = us_x / max(us_f, 1e-9)
+    if on_tpu:
+        assert speedup >= 1.3, (
+            f"fused decode must clear 1.3x over the XLA walk on a native-"
+            f"lowering host, got {speedup:.2f}x"
+        )
+    backend = "tpu" if on_tpu else "interpret"
+    return [
+        csv_row(
+            "decode_step_xla", us_x,
+            f"backend=xla_launches={l_x}_mvm_dispatches={n_mvm}"
+            f"_tokens_per_s={b / (us_x / 1e6):.0f}"),
+        csv_row(
+            "decode_step_fused", us_f,
+            f"backend={backend}_launches={l_f}"
+            f"_speedup_vs_xla={speedup:.2f}x"
+            f"_tokens_per_s={b / (us_f / 1e6):.0f}_parity=bitwise"),
+    ]
 
 
 def run(fast: bool = False) -> list[str]:
@@ -115,6 +208,7 @@ def run(fast: bool = False) -> list[str]:
             f"analog_mvm_gdc_epilogue_{m}x{k}x{n}", us_serve,
             f"tpu_roofline_us={fused_bytes/HBM_BW*1e6:.1f}_fused_gdc"))
     rows.extend(_execute_mvm_rows(fast))
+    rows.extend(_decode_step_rows(fast))
     return rows
 
 

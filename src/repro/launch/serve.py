@@ -191,6 +191,11 @@ def build_parser() -> argparse.ArgumentParser:
                    help="execute through the fused Pallas MVM kernel "
                         "(interpret mode off-TPU); bit-identical to the "
                         "jnp oracle for single-row-tile layers")
+    g.add_argument("--fused-decode", action="store_true",
+                   help="execute the whole programmed decode step as ONE "
+                        "Pallas grid (layer walk = grid dimension, weights "
+                        "double-buffered through VMEM; interpret mode "
+                        "off-TPU); bit-identical to the per-layer path")
     g.add_argument("--mesh-model", type=int, default=0,
                    help="shard programming+serving with this TP degree")
     g.add_argument("--save-program", default=None, metavar="DIR",
@@ -292,6 +297,38 @@ def validate_args(ap: argparse.ArgumentParser, args) -> None:
                      f"{family} family ({args.arch}) carries position-free "
                      "recurrent state that right-padded bucketed prefill "
                      "would corrupt")
+    if args.fused_decode:
+        if not (args.analog or args.load_program):
+            ap.error("--fused-decode executes a compiled chip's per-layer "
+                     "plans as one grid (add --analog or --load-program)")
+        if args.per_call:
+            ap.error("--fused-decode needs the program-once path; "
+                     "--per-call re-simulates programming every forward")
+        if args.use_kernel:
+            ap.error("--fused-decode subsumes the per-MVM kernel "
+                     "(--use-kernel) -- the whole decode step is already "
+                     "one launch")
+        if args.kv_page_size is not None:
+            ap.error("--fused-decode owns one stacked slot cache; it does "
+                     "not compose with the paged KV cache "
+                     "(--kv-page-size)")
+        if args.fleet is not None and args.fleet > 1:
+            ap.error("--fused-decode is not threaded through the fleet "
+                     "path (serve one chip)")
+        if args.mesh_model:
+            ap.error("--fused-decode runs the decode step in one single-"
+                     "device kernel; sharded serving keeps the per-layer "
+                     "path")
+        fused_cfg = configs.get_smoke(args.arch)
+        if fused_cfg.family in ("ssm", "hybrid", "moe"):
+            ap.error(f"--fused-decode fuses the dense attention+FFN layer "
+                     f"walk; the {fused_cfg.family} family ({args.arch}) "
+                     "has recurrent or MoE blocks with no grid-step "
+                     "lowering")
+        if fused_cfg.qkv_bias:
+            ap.error(f"--fused-decode executes bias-free projections; "
+                     f"{args.arch} programs qkv biases the fused grid "
+                     "cannot apply")
     if args.kv_pages is not None and args.kv_page_size is None:
         ap.error("--kv-pages sizes the --kv-page-size pool (pass both)")
     if args.prefill_buckets is not None and args.kv_page_size is None:
@@ -491,6 +528,7 @@ def main() -> None:
             if args.prefill_buckets else None
         ),
         ref_check=not args.no_ref_check,
+        fused_decode=args.fused_decode,
     )
     served = None
     if fleet_n is None:

@@ -61,6 +61,14 @@ class ServingConfig:
         agreement, logit MSE) run when the engine is given ``ref_params``.
         ``False`` skips the lockstep reference decode even if reference
         params are available (the ``serve.py --no-ref-check`` knob).
+    ``fused_decode``
+        Execute the whole programmed decode step as ONE Pallas grid
+        (``kernels/decode_fused.py``): the layer walk becomes a grid
+        dimension and every layer's DAC/MVM/ADC/GDC chain runs inside a
+        single kernel launch. Requires a compiled :class:`CiMProgram`
+        whose plans pass ``engine.build_fused_plan``; bit-identical to
+        the per-layer decode. Does not compose with ``paged`` (the fused
+        grid owns one stacked slot cache, not a page pool).
     """
 
     n_slots: int
@@ -71,10 +79,17 @@ class ServingConfig:
     prefill_buckets: Optional[tuple] = None
     prefill_batch: int = 4
     ref_check: bool = True
+    fused_decode: bool = False
 
     def __post_init__(self):
         if self.n_slots < 1:
             raise ValueError("need at least one decode slot")
+        if self.fused_decode and self.paged:
+            raise ValueError(
+                "fused_decode writes the stacked per-slot KV cache inside "
+                "one decode grid; it does not compose with the paged KV "
+                "cache -- pick one"
+            )
         if self.s_max < 1:
             raise ValueError(f"s_max must be >= 1, got {self.s_max}")
         if self.prefill_buckets is not None:

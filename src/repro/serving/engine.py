@@ -73,6 +73,7 @@ from repro import clock as clock_lib
 from repro.core import engine as engine_mod
 from repro.core.analog import AnalogConfig
 from repro.core.engine import CiMProgram, DriftSchedule
+from repro.kernels import decode_fused
 from repro.models import attention as attn_lib
 from repro.models.common import ModelConfig
 from repro.models.lm import (
@@ -391,6 +392,31 @@ class ServingEngine:
                 page_size=self.page_size, n_pages=2,
             )
 
+        self.fused = bool(getattr(config, "fused_decode", False))
+        self._fused_plan = None
+        if self.fused:
+            if program is None:
+                raise ValueError(
+                    "fused_decode executes a compiled CiMProgram's per-"
+                    "layer plans as one grid; pass program= (or use "
+                    "ServingEngine.for_program)"
+                )
+            if mesh is not None:
+                raise NotImplementedError(
+                    "fused decode runs the whole step in one single-"
+                    "device kernel; sharded serving keeps the per-layer "
+                    "path"
+                )
+            if block_period(model_cfg) != ["attn"]:
+                raise NotImplementedError(
+                    "fused decode supports the dense attention+FFN layer "
+                    f"walk; family {model_cfg.family!r} has recurrent or "
+                    "MoE blocks with no grid-step lowering"
+                )
+            # raises ValueError when the artifact's plans can't be
+            # statically fused (tail layers, biases, missing GDC scalars)
+            self._fused_plan = engine_mod.build_fused_plan(program)
+
         cfg, acfg, s_full = self.cfg, self.acfg, self.s_max
 
         def prefill(params, batch, rng):
@@ -417,6 +443,32 @@ class ServingEngine:
         # but without donation XLA copies the whole multi-layer buffer
         self._write_slot = jax.jit(write_cache_slot, donate_argnums=(0,))
         self._reset_slot = jax.jit(reset_cache_slot, donate_argnums=(0,))
+
+        # the MAIN cache's slot writers: the fused path swaps in the
+        # stacked-layout versions while the reference cache (always the
+        # rectangular per-slot layout) keeps using _write/_reset_slot
+        self._write_main = self._write_slot
+        self._reset_main = self._reset_slot
+        if self.fused:
+            fplan = self._fused_plan
+
+            def fused_step(params, tok, cache, rng):
+                logits, cache = decode_fused.fused_decode_step(
+                    params, tok, cache, fplan, cfg, acfg,
+                    rng=rng if acfg.needs_rng else None,
+                )
+                last = logits[:, -1]
+                return (
+                    jnp.argmax(last, axis=-1).astype(jnp.int32), last, cache
+                )
+
+            self._decode = jax.jit(fused_step, donate_argnums=(2,))
+            self._write_main = jax.jit(
+                decode_fused.write_fused_slot, donate_argnums=(0,)
+            )
+            self._reset_main = jax.jit(
+                decode_fused.reset_fused_slot, donate_argnums=(0,)
+            )
 
         if self.paged:
 
@@ -669,6 +721,15 @@ class EngineRun:
             # pool exhaustion cannot deadlock the decode loop.
             self.allocator = PageAllocator(engine.n_pages)
             self.reserved = 0
+        elif engine.fused:
+            # one stacked (L, B, S, kv, hd) buffer: the fused grid's layer
+            # axis doubles as its BlockSpec index
+            self.cache = decode_fused.init_fused_cache(
+                engine.cfg, engine._fused_plan.n_groups, engine.n_slots,
+                engine.s_max, engine.cfg.dtype,
+            )
+            self.allocator = None
+            self.reserved = 0
         else:
             self.cache = init_lm_cache(
                 engine.cfg, engine.n_slots, engine.s_max, engine.cfg.dtype,
@@ -827,7 +888,7 @@ class EngineRun:
                 eng._prefill_inputs(req),
                 jax.random.fold_in(eng.rng, 1_000_000 + req.rid),
             )
-            self.cache = eng._write_slot(self.cache, pcache, jnp.int32(slot))
+            self.cache = eng._write_main(self.cache, pcache, jnp.int32(slot))
             self.cur = self.cur.at[slot, 0].set(tok0[0])
             if eng._ref:
                 r_logits, r_pcache = eng._ref_prefill(
@@ -1080,7 +1141,7 @@ class EngineRun:
             self.allocator.free(st.pages)
             self.reserved -= st.reserve_left
         else:
-            self.cache = eng._reset_slot(self.cache, jnp.int32(i))
+            self.cache = eng._reset_main(self.cache, jnp.int32(i))
         if eng._ref:
             self.ref_cache = eng._reset_slot(self.ref_cache, jnp.int32(i))
         self.slots[i] = None

@@ -1,0 +1,236 @@
+"""Fused decode megakernel: ADC codes bit-identical to the per-layer path.
+
+The contract of ``kernels/decode_fused.py`` is exact: executing the whole
+programmed decode step as ONE Pallas grid must produce byte-for-byte the
+logits (post-ADC/GDC codes all the way through the lm_head) and KV cache
+rows of ``lm_forward``'s unfused per-layer decode -- across ADC bitwidths
+{4, 6, 8}, mixed per-layer ``b_adc_overrides``, drift ages, and per-MVM
+read-noise resampling. Everything here asserts ``array_equal``, never
+``allclose``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as engine_mod
+from repro.core.analog import AnalogConfig
+from repro.kernels import decode_fused as df
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.serving import Request, ServingConfig, ServingEngine
+
+CFG = ModelConfig(name="t", family="dense", n_kv_heads=2).smoke()
+S = 16  # per-slot cache capacity for the manual-parity walks
+
+
+def _program(b_adc=8, overrides=None, resample=False, t_seconds=86400.0):
+    params = lm.lm_init(jax.random.PRNGKey(0), CFG)
+    acfg = AnalogConfig().infer(
+        b_adc=b_adc, t_seconds=t_seconds, resample_read_noise=resample
+    )
+    return engine_mod.compile_program(
+        params, acfg, jax.random.PRNGKey(42), b_adc_overrides=overrides
+    )
+
+
+def _assert_parity(program, fplan=None, n_steps=3, rng_base=None):
+    """Walk prefill + n_steps greedy decode on BOTH paths, asserting the
+    logits AND every layer's KV rows bitwise equal at each step."""
+    fplan = fplan or engine_mod.build_fused_plan(program)
+    params, acfg = program.params, program.cfg
+    prompts = [
+        jnp.array([[3, 5, 7, 9]], jnp.int32),
+        jnp.array([[11, 13, 17, 19, 23]], jnp.int32),
+    ]
+    B = len(prompts)
+    ucache = lm.init_lm_cache(CFG, B, S, CFG.dtype, stacked=False,
+                              per_slot=True)
+    fcache = df.init_fused_cache(CFG, fplan.n_groups, B, S, CFG.dtype)
+    for slot, p in enumerate(prompts):
+        c = lm.init_lm_cache(CFG, 1, S, CFG.dtype)
+        pkey = (
+            jax.random.fold_in(jax.random.PRNGKey(5), slot)
+            if acfg.needs_rng else None
+        )
+        _, c = lm.lm_forward(params, {"tokens": p}, acfg, CFG, cache=c,
+                             last_token_only=True, rng=pkey)
+        pc = lm.unstack_cache(c)
+        ucache = lm.write_cache_slot(ucache, pc, slot)
+        fcache = df.write_fused_slot(fcache, pc, slot)
+
+    cur = jnp.array([[4], [6]], jnp.int32)
+    for step in range(n_steps):
+        key = (
+            jax.random.fold_in(rng_base, step)
+            if rng_base is not None else None
+        )
+        ul, ucache = lm.lm_forward(params, {"tokens": cur}, acfg, CFG,
+                                   cache=ucache, rng=key)
+        fl, fcache = df.fused_decode_step(params, cur, fcache, fplan, CFG,
+                                          acfg, rng=key)
+        np.testing.assert_array_equal(np.asarray(ul), np.asarray(fl))
+        groups, _ = ucache
+        for g in range(fplan.n_groups):
+            np.testing.assert_array_equal(
+                np.asarray(fcache.k[g]), np.asarray(groups[g][0].k)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(fcache.v[g]), np.asarray(groups[g][0].v)
+            )
+        np.testing.assert_array_equal(
+            np.asarray(fcache.length), np.asarray(groups[0][0].length)
+        )
+        cur = jnp.argmax(ul[:, -1], -1).astype(jnp.int32)[:, None]
+
+
+# ------------------------------------------------------- bitwise parity
+
+
+@pytest.mark.parametrize("b_adc", [4, 6, 8])
+def test_fused_decode_bit_identical(b_adc):
+    _assert_parity(_program(b_adc=b_adc))
+
+
+def test_fused_decode_mixed_overrides_resolve_statically():
+    program = _program(b_adc=8, overrides={"blocks/*": 4})
+    fplan = engine_mod.build_fused_plan(program)
+    # the override resolves to a STATIC per-grid-step bitwidth, one plan
+    # per projection shared by the whole stacked group
+    assert [p.spec.b_adc for p in fplan.proj_plans] == [4] * 7
+    assert fplan.head_plan.spec.b_adc == 8
+    _assert_parity(program, fplan=fplan)
+
+
+def test_fused_decode_parity_across_drift_age():
+    program = engine_mod.age_program(_program(b_adc=6), 30 * 86400.0)
+    _assert_parity(program)
+
+
+def test_fused_decode_parity_with_resampled_read_noise():
+    program = _program(b_adc=8, resample=True)
+    assert program.cfg.needs_rng
+    _assert_parity(program, rng_base=jax.random.PRNGKey(9))
+
+
+# ---------------------------------------------------- serving engine path
+
+
+def _reqs(lens=(4, 8, 12), new_tokens=3, rid0=0):
+    return [
+        Request(rid=rid0 + i,
+                prompt=(np.arange(n) * 7 % CFG.vocab).astype(np.int32),
+                max_new_tokens=new_tokens)
+        for i, n in enumerate(lens)
+    ]
+
+
+def test_fused_engine_matches_unfused_on_mixed_trace():
+    program = _program(b_adc=8, overrides={"blocks/*": 4})
+    scfg = ServingConfig(n_slots=2, s_max=S)
+    rect = ServingEngine.for_program(program, CFG, scfg)
+    fused = ServingEngine.for_program(
+        program, CFG, dataclasses.replace(scfg, fused_decode=True)
+    )
+    rep_r = rect.run(_reqs())
+    rep_f = fused.run(_reqs())
+    for r in _reqs():
+        assert np.array_equal(rep_f.tokens_of(r.rid), rep_r.tokens_of(r.rid))
+    assert rep_f.program_events_delta == 0
+    # the stacked fused cache holds exactly the rectangular cache's bytes
+    assert rep_f.peak_kv_bytes == rep_r.peak_kv_bytes
+
+
+def test_fused_engine_resample_matches_unfused():
+    """Per-MVM read-noise draws depend only on the engine rng discipline
+    (fold by rid at prefill, by step at decode), so the fused engine's
+    stream is draw-for-draw the unfused engine's."""
+    program = _program(b_adc=8, resample=True)
+    scfg = ServingConfig(n_slots=2, s_max=S, ref_check=False)
+    rect = ServingEngine.for_program(program, CFG, scfg)
+    fused = ServingEngine.for_program(
+        program, CFG, dataclasses.replace(scfg, fused_decode=True)
+    )
+    rep_r = rect.run(_reqs())
+    rep_f = fused.run(_reqs())
+    for r in _reqs():
+        assert np.array_equal(rep_f.tokens_of(r.rid), rep_r.tokens_of(r.rid))
+
+
+def test_warmed_fused_engine_adds_zero_retraces(assert_max_retraces):
+    """Satellite: a warmed fused engine serving a mixed trace compiles
+    NOTHING new -- one prefill trace per distinct prompt length, one fused
+    decode trace total (the megakernel's whole point: one launch, one
+    trace)."""
+    program = _program(b_adc=8)
+    fused = ServingEngine.for_program(
+        program, CFG, ServingConfig(n_slots=2, s_max=S, fused_decode=True)
+    )
+    fused.run(_reqs())  # warm: prefill buckets + the ONE fused decode trace
+    with assert_max_retraces(0):
+        fused.run(_reqs(rid0=100))  # same length set, fresh requests
+    assert fused._prefill_shapes == {(1, 4), (1, 8), (1, 12)}
+
+
+# ------------------------------------------------------------- rejections
+
+
+def test_serving_config_rejects_fused_plus_paged():
+    with pytest.raises(ValueError, match="paged"):
+        ServingConfig(n_slots=2, s_max=S, paged=True, fused_decode=True)
+
+
+def test_fused_engine_requires_a_program():
+    params = lm.lm_init(jax.random.PRNGKey(0), CFG)
+    with pytest.raises(ValueError, match="CiMProgram"):
+        ServingEngine(
+            CFG, AnalogConfig(), params,
+            ServingConfig(n_slots=2, s_max=S, fused_decode=True),
+        )
+
+
+def test_build_fused_plan_rejects_kernel_backend_programs():
+    program = _program()
+    bad = dataclasses.replace(
+        program, cfg=dataclasses.replace(program.cfg, use_kernel=True)
+    )
+    with pytest.raises(ValueError, match="use_kernel"):
+        engine_mod.build_fused_plan(bad)
+
+
+def test_build_fused_plan_rejects_non_dense_plans():
+    cfg = ModelConfig(name="t", family="ssm", n_layers=2,
+                      ssm_state=16).smoke()
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    program = engine_mod.compile_program(
+        params, AnalogConfig().infer(b_adc=8), jax.random.PRNGKey(42)
+    )
+    with pytest.raises(ValueError, match="statically fused"):
+        engine_mod.build_fused_plan(program)
+
+
+def test_build_fused_plan_rejects_biased_projections():
+    cfg = ModelConfig(name="t", family="dense", qkv_bias=True).smoke()
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    program = engine_mod.compile_program(
+        params, AnalogConfig().infer(b_adc=8), jax.random.PRNGKey(42)
+    )
+    with pytest.raises(ValueError, match="bias"):
+        engine_mod.build_fused_plan(program)
+
+
+def test_fused_engine_rejects_recurrent_families():
+    cfg = ModelConfig(name="t", family="ssm", n_layers=2,
+                      ssm_state=16).smoke()
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    program = engine_mod.compile_program(
+        params, AnalogConfig().infer(b_adc=8), jax.random.PRNGKey(42)
+    )
+    with pytest.raises(NotImplementedError, match="family"):
+        ServingEngine.for_program(
+            program, cfg, ServingConfig(n_slots=2, s_max=S,
+                                        fused_decode=True)
+        )

@@ -217,6 +217,30 @@ BAD_ARGV = {
         "--analog", "--fleet", "2", "--request-trace", "4",
         "--async", "--queue-cap", "0",
     ],
+    "fused_decode_without_program": ["--fused-decode"],
+    "fused_decode_with_per_call": [
+        "--analog", "--per-call", "--fused-decode"
+    ],
+    "fused_decode_with_use_kernel": [
+        "--analog", "--fused-decode", "--use-kernel"
+    ],
+    "fused_decode_with_paged_kv": [
+        "--analog", "--request-trace", "3", "--kv-page-size", "16",
+        "--fused-decode",
+    ],
+    "fused_decode_with_fleet": [
+        "--analog", "--fleet", "2", "--request-trace", "4",
+        "--fused-decode",
+    ],
+    "fused_decode_with_mesh": [
+        "--analog", "--fused-decode", "--mesh-model", "2"
+    ],
+    "fused_decode_with_recurrent_family": [
+        "--analog", "--arch", "mamba2-2.7b", "--fused-decode"
+    ],
+    "fused_decode_with_qkv_bias_arch": [
+        "--analog", "--arch", "qwen2-72b", "--fused-decode"
+    ],
 }
 
 
@@ -304,6 +328,34 @@ def test_serve_cli_fleet_of_one_is_the_single_engine_path(monkeypatch,
     for out in outs:
         assert "fleet:" not in out
         assert "serving: mode=continuous requests=3" in out
+
+    def stable(out):
+        return [
+            line for line in out.splitlines()
+            if line.startswith(("generated token ids",
+                                "accuracy_vs_digital_ref:"))
+        ]
+
+    assert stable(outs[0]) == stable(outs[1])
+
+
+def test_serve_cli_fused_decode_smoke(monkeypatch, capsys):
+    """--fused-decode end-to-end through the CLI: the whole decode step
+    runs as one Pallas grid, and the generations + accuracy counters are
+    byte-identical to the per-layer decode path."""
+    from repro.launch import serve
+
+    argv = ["serve", "--analog", "--batch", "2", "--prompt-len", "8",
+            "--tokens", "4", "--request-trace", "3",
+            "--arrival-rate", "200"]
+    outs = []
+    for extra in ([], ["--fused-decode"]):
+        monkeypatch.setattr("sys.argv", argv + extra)
+        serve.main()
+        outs.append(capsys.readouterr().out)
+    for out in outs:
+        assert "serving: mode=continuous requests=3" in out
+        assert "program_events_delta=0" in out
 
     def stable(out):
         return [
